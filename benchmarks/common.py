@@ -1,0 +1,44 @@
+"""Shared benchmark fixtures: graph suite + timing."""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+from typing import Callable, Dict
+
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.graph import Graph  # noqa: E402
+from repro.data import (erdos_renyi, planted_cliques, powerlaw_graph,  # noqa: E402
+                        rmat_graph)
+
+
+@functools.lru_cache(maxsize=None)
+def graph_suite() -> Dict[str, Graph]:
+    """Offline analogues of the paper's Table 1 regimes.
+
+    power-law graphs: tau/delta clearly < 1 (the WK/PO/SO social family);
+    planted-clique graphs: tau ~ delta (the dense DB/CI/WE family);
+    RMAT: skewed web-like; ER: homogeneous baseline.
+    """
+    return {
+        "ba3k": powerlaw_graph(3000, 12, seed=3),
+        "er1k": erdos_renyi(1000, 0.03, seed=1),
+        "rmat12": rmat_graph(12, 6, seed=7),
+        "plant": planted_cliques(1500, 12, 14, p_noise=0.004, seed=5),
+    }
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,24 @@
+"""Insert the generated roofline tables into EXPERIMENTS.md placeholders."""
+import re
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks.roofline_report import table  # noqa: E402
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    single = table("single")
+    multi = table("multipod")
+    text = re.sub(r"<!-- ROOFLINE_TABLE_SINGLE -->(.|\n)*?(?=\n\nMulti-pod)",
+                  single, text, count=1)
+    text = re.sub(r"<!-- ROOFLINE_TABLE_MULTI -->(.|\n)*?(?=\n\nReading)",
+                  multi + "\n", text, count=1)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("tables inserted")
+
+
+if __name__ == "__main__":
+    main()

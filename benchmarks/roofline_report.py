@@ -1,0 +1,68 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(mesh: str, out="artifacts/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def table(mesh: str, out="artifacts/dryrun"):
+    rows = []
+    head = ("| arch | shape | compute | memory | collective | dominant | "
+            "HBM GB/dev | model/HLO flops | note |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for r in load(mesh, out):
+        name = f"| {r['arch']} | {r['shape']} "
+        if r["status"] == "skipped":
+            rows.append(name + f"| -- | -- | -- | skipped | -- | -- | "
+                        f"{r['reason'][:60]}... |")
+            continue
+        if r["status"] != "ok":
+            rows.append(name + "| ERROR ||||||" + r.get("error", "")[:40] +
+                        " |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 1e9
+        ratio = r.get("model_over_hlo_flops")
+        ratio_s = f"{ratio:.2f}" if ratio else "--"
+        rows.append(
+            name + f"| {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+            f"| {fmt_s(t['collective_s'])} | {t['dominant'][:-2]} "
+            f"| {hbm:.1f} | {ratio_s} |  |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    print(table(args.mesh, args.out))
+
+
+if __name__ == "__main__":
+    main()

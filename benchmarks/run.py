@@ -1,0 +1,272 @@
+"""Benchmark harness -- one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Host-engine timings run the
+paper-faithful bitset recursions (python-int bitsets ~ the paper's bitmap
+adjacency); relative comparisons between algorithms reproduce the paper's
+figures.  The device-engine roofline projection uses the TPU v5e model of
+EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.run [bench_name ...]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from .common import emit, graph_suite, timed
+
+from repro.core import ebbkc, vbbkc
+from repro.core.graph import degeneracy_order, max_clique_size
+from repro.core.truss import truss_decomposition
+
+
+# ---------------------------------------------------------------------------
+# Table 1: dataset statistics (validates tau < delta, the Lemma 4.1 claim)
+# ---------------------------------------------------------------------------
+
+def bench_dataset_stats():
+    for name, g in graph_suite().items():
+        td, dt_t = timed(truss_decomposition, g)
+        (_, delta), _ = timed(degeneracy_order, g)
+        omega = max_clique_size(g)
+        deg = g.degrees().max() if g.n else 0
+        assert td.tau < delta, f"Lemma 4.1 violated on {name}"
+        emit(f"stats/{name}", dt_t,
+             f"n={g.n};m={g.m};maxdeg={deg};delta={delta};tau={td.tau};"
+             f"omega={omega};tau_lt_delta=True")
+
+
+# ---------------------------------------------------------------------------
+# Fig 4/5: runtime vs k -- EBBkC+ET against the VBBkC baselines
+# ---------------------------------------------------------------------------
+
+def bench_kclique_runtime():
+    for name, g in graph_suite().items():
+        for k in (4, 5, 6, 7, 8):
+            r_e, t_e = timed(ebbkc.count, g, k, order="hybrid", et_t=3)
+            r_v, t_v = timed(vbbkc.count, g, k, variant="ddegcol")
+            r_d, t_d = timed(vbbkc.count, g, k, variant="degen")
+            assert r_e.count == r_v.count == r_d.count
+            emit(f"runtime/{name}/k{k}/ebbkc+et", t_e,
+                 f"count={r_e.count};speedup_vs_ddegcol={t_v / t_e:.2f};"
+                 f"speedup_vs_degen={t_d / t_e:.2f}")
+            emit(f"runtime/{name}/k{k}/ddegcol", t_v, f"count={r_v.count}")
+            emit(f"runtime/{name}/k{k}/degen", t_d, f"count={r_d.count}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: ablation -- framework vs early-termination contributions
+# ---------------------------------------------------------------------------
+
+def bench_ablation():
+    for name in ("ba3k", "plant"):
+        g = graph_suite()[name]
+        for k in (5, 7):
+            r1, t1 = timed(ebbkc.count, g, k, order="hybrid", et_t=3)
+            r2, t2 = timed(ebbkc.count, g, k, order="hybrid", et_t=0)
+            r3, t3 = timed(vbbkc.count, g, k, variant="ddegcol+")
+            r4, t4 = timed(vbbkc.count, g, k, variant="ddegcol")
+            assert r1.count == r2.count == r3.count == r4.count
+            emit(f"ablation/{name}/k{k}/ebbkc+et", t1,
+                 f"branches={r1.stats.branches};et_hits={r1.stats.et_hits}")
+            emit(f"ablation/{name}/k{k}/ebbkc", t2,
+                 f"branches={r2.stats.branches}")
+            emit(f"ablation/{name}/k{k}/ddegcol+rule2", t3,
+                 f"branches={r3.stats.branches}")
+            emit(f"ablation/{name}/k{k}/ddegcol", t4,
+                 f"branches={r4.stats.branches}")
+
+
+# ---------------------------------------------------------------------------
+# Table 2: ordering generation time (truss vs degeneracy)
+# ---------------------------------------------------------------------------
+
+def bench_ordering_time():
+    for name, g in graph_suite().items():
+        _, t_truss = timed(truss_decomposition, g)
+        _, t_degen = timed(degeneracy_order, g)
+        emit(f"ordering/{name}/truss", t_truss,
+             f"ratio_vs_degen={t_truss / max(t_degen, 1e-9):.2f}")
+        emit(f"ordering/{name}/degeneracy", t_degen, "")
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: the three edge orderings (T / C / H), all with ET
+# ---------------------------------------------------------------------------
+
+def bench_edge_orderings():
+    for name in ("ba3k", "er1k"):
+        g = graph_suite()[name]
+        for k in (5, 6):
+            res = {}
+            for order in ("truss", "color", "hybrid"):
+                r, t = timed(ebbkc.count, g, k, order=order, et_t=3)
+                res[order] = (r, t)
+            counts = {r.count for r, _ in res.values()}
+            assert len(counts) == 1
+            for order, (r, t) in res.items():
+                emit(f"edge_order/{name}/k{k}/{order}", t,
+                     f"branches={r.stats.branches};"
+                     f"max_tile={r.max_tile}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 8: effect of the new color Rule (2)
+# ---------------------------------------------------------------------------
+
+def bench_rule2():
+    for name in ("ba3k", "rmat12"):
+        g = graph_suite()[name]
+        for k in (5, 7, 9):
+            r2, t2 = timed(ebbkc.count, g, k, order="hybrid", et_t=3,
+                           use_rule2=True)
+            r0, t0 = timed(ebbkc.count, g, k, order="hybrid", et_t=3,
+                           use_rule2=False)
+            assert r2.count == r0.count
+            emit(f"rule2/{name}/k{k}/with", t2,
+                 f"pruned={r2.stats.pruned_color}")
+            emit(f"rule2/{name}/k{k}/without", t0,
+                 f"pruned={r0.stats.pruned_color};"
+                 f"speedup={t0 / max(t2, 1e-9):.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 9: early-termination threshold t
+# ---------------------------------------------------------------------------
+
+def bench_et_t():
+    g = graph_suite()["plant"]
+    for k in (6, 9):
+        base = None
+        for t_plex in (0, 2, 3, 4, 5):
+            r, t = timed(ebbkc.count, g, k, order="hybrid", et_t=t_plex)
+            if base is None:
+                base = r.count
+            assert r.count == base
+            emit(f"et_t/plant/k{k}/t{t_plex}", t,
+                 f"et_hits={r.stats.et_hits};branches={r.stats.branches}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 10: parallelization -- NP vs EP vs LPT-scheduled EP load balance
+# ---------------------------------------------------------------------------
+
+def bench_parallel():
+    from repro.core import tiles as tiles_mod
+    from repro.core.engine_np import Stats, count_rec_C, count_rec_V
+    from repro.runtime.clique_scheduler import balanced_bins
+
+    g = graph_suite()["ba3k"]
+    k = 6
+    # true per-unit work = measured branch count per top-level branch
+    ep_costs = []
+    for tile in tiles_mod.edge_tiles(g, k, mode="hybrid"):
+        st = Stats()
+        count_rec_C(tile.rows, (1 << tile.s) - 1, k - 2, st,
+                    colors=tile.colors, et_t=3)
+        ep_costs.append(st.branches + tile.s + 1)
+    np_costs = []
+    for tile in tiles_mod.vertex_tiles(g, k, colored=True):
+        st = Stats()
+        count_rec_V(tile.rows, (1 << tile.s) - 1, k - 1, st,
+                    colors=tile.colors, et_t=3)
+        np_costs.append(st.branches + tile.s + 1)
+    for n_dev in (16, 64, 256):
+        for scheme, costs in (("np", np_costs), ("ep", ep_costs)):
+            # round-robin static assignment (the naive scheme)
+            loads = np.zeros(n_dev)
+            for i, c in enumerate(costs):
+                loads[i % n_dev] += c
+            rr = loads.max() / max(loads.mean(), 1e-9)
+            _, lpt_loads = balanced_bins(costs, n_dev)
+            lpt = lpt_loads.max() / max(lpt_loads.mean(), 1e-9)
+            emit(f"parallel/ba3k/k{k}/{scheme}/dev{n_dev}", 0.0,
+                 f"units={len(costs)};roundrobin_imbalance={rr:.3f};"
+                 f"lpt_imbalance={lpt:.3f};"
+                 f"parallel_efficiency={1 / lpt:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 11: space costs of the engine structures
+# ---------------------------------------------------------------------------
+
+def bench_space():
+    from repro.core import engine_jax
+    for name, g in graph_suite().items():
+        binned, t = timed(engine_jax.bin_tiles, g, 5)
+        tile_bytes = sum(p.A.nbytes + p.cand.nbytes
+                         for p in binned.values())
+        graph_bytes = g.edges.nbytes + g.indptr.nbytes + g.indices.nbytes
+        emit(f"space/{name}", t,
+             f"graph_bytes={graph_bytes};tile_bytes={tile_bytes};"
+             f"ratio={tile_bytes / max(graph_bytes, 1):.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 12: scalability -- runtime vs graph size (RMAT scaling)
+# ---------------------------------------------------------------------------
+
+def bench_scalability():
+    from repro.data import rmat_graph
+    k = 5
+    for scale in (10, 11, 12, 13):
+        g = rmat_graph(scale, 6, seed=7)
+        r, t = timed(ebbkc.count, g, k, order="hybrid", et_t=3)
+        emit(f"scalability/rmat{scale}/k{k}", t,
+             f"n={g.n};m={g.m};count={r.count}")
+
+
+# ---------------------------------------------------------------------------
+# Device engine: kernel-path comparison + roofline projection
+# ---------------------------------------------------------------------------
+
+def bench_device_engine():
+    import jax.numpy as jnp
+    from repro.core import engine_jax
+
+    g = graph_suite()["ba3k"]
+    k = 5
+    ref = ebbkc.count(g, k).count
+    binned, t_pack = timed(engine_jax.bin_tiles, g, k)
+    bins_desc = ":".join(f"T{T}x{p.A.shape[0]}" for T, p in binned.items())
+    emit(f"device/pack/ba3k/k{k}", t_pack, f"bins={bins_desc}")
+    total = 0
+    n_tiles = 0
+    flops_mxu = 0
+    for T, packed in binned.items():
+        A, cand = jnp.asarray(packed.A), jnp.asarray(packed.cand)
+        (hard, nv, t, f), dt = timed(
+            engine_jax.count_packed, A, cand, k - 2, et=True,
+            interpret=True)
+        total += engine_jax.combine_counts(hard, nv, t, f, k - 2, True)
+        n_tiles += packed.A.shape[0]
+        flops_mxu += packed.A.shape[0] * 2 * T ** 3  # dense-tile matmul path
+        emit(f"device/count/ba3k/k{k}/T{T}", dt,
+             f"tiles={packed.A.shape[0]}")
+    assert total == ref, (total, ref)
+    # roofline projection: MXU path at 197 TFLOP/s
+    peak = 197e12
+    emit(f"device/roofline/ba3k/k{k}", flops_mxu / peak,
+         f"tiles={n_tiles};mxu_flops={flops_mxu};"
+         f"projected_tpu_seconds={flops_mxu / peak:.3e}")
+
+
+ALL = [
+    bench_dataset_stats, bench_kclique_runtime, bench_ablation,
+    bench_ordering_time, bench_edge_orderings, bench_rule2, bench_et_t,
+    bench_parallel, bench_space, bench_scalability, bench_device_engine,
+]
+
+
+def main() -> None:
+    wanted = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if wanted and fn.__name__ not in wanted:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

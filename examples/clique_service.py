@@ -1,0 +1,75 @@
+"""End-to-end driver (the paper's kind is a graph-mining operator, so the
+end-to-end application is a distributed clique-analytics service):
+
+  1. ingest a stream of graph snapshots (synthetic RMAT / power-law);
+  2. preprocess on host: truss decomposition -> pi_tau -> tau-bounded tiles;
+  3. schedule tiles across devices with LPT cost balancing (EP scheme);
+  4. count k-cliques on the accelerator engine (Pallas kernels);
+  5. serve per-snapshot clique-density reports, with checkpointed progress
+     so a killed service resumes at the next snapshot.
+
+    PYTHONPATH=src python examples/clique_service.py --snapshots 3 --k 5
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core import engine_jax
+from repro.core.truss import truss_decomposition
+from repro.data import powerlaw_graph, rmat_graph
+from repro.runtime.clique_scheduler import schedule_tiles
+
+
+def snapshot(i: int):
+    if i % 2 == 0:
+        return f"rmat-{i}", rmat_graph(11, 6, seed=100 + i)
+    return f"powerlaw-{i}", powerlaw_graph(2500, 10, seed=100 + i)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snapshots", type=int, default=3)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--ckpt", default="/tmp/repro_clique_service")
+    args = ap.parse_args()
+
+    start = 0
+    got = restore_checkpoint(args.ckpt, {"done": jnp.zeros((), jnp.int32)})
+    if got:
+        start = int(got["tree"]["done"])
+        print(f"resuming after snapshot {start - 1}")
+
+    l = args.k - 2
+    for i in range(start, args.snapshots):
+        name, g = snapshot(i)
+        t0 = time.time()
+        td = truss_decomposition(g)
+        binned = engine_jax.bin_tiles(g, args.k)
+        total = 0
+        n_tiles = 0
+        for T, packed in binned.items():
+            metas = [type("M", (), {"s": T, "nedges": 2 * T})()
+                     for _ in range(packed.A.shape[0])]
+            _, stats = schedule_tiles(metas, l, jax.device_count())
+            hard, nv, t, f = engine_jax.count_packed(
+                jnp.asarray(packed.A), jnp.asarray(packed.cand), l,
+                et=True, interpret=True)
+            total += engine_jax.combine_counts(hard, nv, t, f, l, True)
+            n_tiles += packed.A.shape[0]
+        dt = time.time() - t0
+        density = total / max(g.n, 1)
+        print(f"[{name}] n={g.n} m={g.m} tau={td.tau} -> "
+              f"{total} {args.k}-cliques ({density:.2f}/vertex) "
+              f"tiles={n_tiles} in {dt:.2f}s")
+        save_checkpoint(args.ckpt, i + 1,
+                        {"done": jnp.int32(i + 1)},
+                        metadata={"snapshot": name, "count": int(total)})
+    print("service drained; progress checkpointed at", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

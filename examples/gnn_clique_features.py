@@ -1,0 +1,76 @@
+"""Train a GIN whose node features are augmented with per-node k-clique
+counts produced by the EBBkC operator -- the paper's technique feeding the
+GNN substrate (higher-order structure as features, cf. paper Section 1's
+motif applications).
+
+    PYTHONPATH=src python examples/gnn_clique_features.py --steps 200
+"""
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ebbkc
+from repro.data import planted_cliques
+from repro.models import gnn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def clique_features(g, ks=(3, 4)):
+    """Per-node clique participation counts via the listing engine."""
+    feats = np.zeros((g.n, len(ks)), np.float32)
+    for j, k in enumerate(ks):
+        cliques, _ = ebbkc.list_cliques(g, k)
+        for row in cliques:
+            feats[row, j] += 1.0
+    return np.log1p(feats)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    # task: classify whether a node belongs to a planted clique
+    g = planted_cliques(300, 6, 9, p_noise=0.02, seed=3)
+    labels = np.zeros(g.n, np.int32)
+    cliques, _ = ebbkc.list_cliques(g, 8)
+    for row in cliques:
+        labels[row] = 1
+    deg = g.degrees().astype(np.float32)[:, None]
+    cf = clique_features(g)
+    feats = np.concatenate([deg / max(deg.max(), 1), cf], axis=1)
+    edges = jnp.asarray(np.concatenate([g.edges.T, g.edges.T[::-1]], 1),
+                        jnp.int32)
+    mask = jnp.ones((edges.shape[1],), jnp.float32)
+
+    cfg = gnn.GINConfig(n_layers=3, d_hidden=32, d_in=feats.shape[1],
+                        n_classes=2)
+    params = gnn.init_gin(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.0)
+    X, Y = jnp.asarray(feats), jnp.asarray(labels)
+
+    @jax.jit
+    def step(params, opt):
+        def lf(p):
+            logits = gnn.gin_forward(p, X, edges, mask, cfg)
+            oh = jax.nn.one_hot(Y, 2)
+            return -(oh * jax.nn.log_softmax(logits)).sum(-1).mean()
+        loss, grads = jax.value_and_grad(lf)(params)
+        params, opt, _ = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    for i in range(args.steps):
+        params, opt, loss = step(params, opt)
+        if i % 50 == 0 or i == args.steps - 1:
+            logits = gnn.gin_forward(params, X, edges, mask, cfg)
+            acc = float((jnp.argmax(logits, -1) == Y).mean())
+            print(f"step {i}: loss={float(loss):.4f} acc={acc:.3f}")
+    assert acc > 0.9, "clique features should make this easy"
+    print("final accuracy:", acc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Fault-tolerant numpy checkpointing with elastic re-shard on restore."""
+from .store import (save_checkpoint, restore_checkpoint, latest_step,
+                    gc_checkpoints)

@@ -1,0 +1,127 @@
+"""Sharded numpy checkpoints: atomic, resumable, mesh-elastic.
+
+Layout: <dir>/step_<N>/{arrays.npz, meta.json, COMMITTED}
+
+* **Atomic**: written to ``step_<N>.tmp`` then ``os.replace``d; a crash
+  mid-write never corrupts the latest checkpoint; restore picks the newest
+  *committed* step.
+* **Elastic**: arrays are stored as full logical values (gathered); restore
+  re-device_puts under whatever shardings the *restarted* mesh provides, so
+  a job can come back on a different topology (tested 8 -> 4 devices).
+  At real scale this becomes per-shard files + a reshard service; the
+  commit protocol and logical-value contract stay identical.
+* Pipeline state and arbitrary JSON metadata ride along.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/#{i}", v)
+        else:
+            flat[prefix] = node
+
+    rec("", tree)
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [rec(f"{prefix}/#{i}", v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        return flat[prefix]
+    return rec("", template)
+
+
+def save_checkpoint(directory: str, step: int, tree,
+                    pipeline_state: Optional[Dict] = None,
+                    metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "pipeline": pipeline_state or {},
+            "metadata": metadata or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "COMMITTED")):
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree (same structure) of jax.sharding.Sharding
+    -- this is the elastic-rescale path: arrays are placed under the *new*
+    mesh regardless of the topology that wrote them.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    path = os.path.join(directory, f"step_{step:010d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k: data[k] for k in data.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            tree, shardings,
+            is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return {"step": step, "tree": tree, "pipeline": meta["pipeline"],
+            "metadata": meta["metadata"]}
+
+
+def gc_checkpoints(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(m.group(1)) for name in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", name)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)

@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchSpec
+
+_MODULES = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "dbrx-132b": "dbrx_132b",
+    "gemma3-27b": "gemma3_27b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "granite-3-8b": "granite_3_8b",
+    "gin-tu": "gin_tu",
+    "nequip": "nequip",
+    "meshgraphnet": "meshgraphnet",
+    "egnn": "egnn",
+    "dcn-v2": "dcn_v2",
+    "ebbkc": "ebbkc",
+}
+
+ASSIGNED = [k for k in _MODULES if k != "ebbkc"]
+
+
+def get(name: str) -> ArchSpec:
+    import importlib
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f".{_MODULES[name]}", __package__)
+    return mod.SPEC
+
+
+def all_specs() -> Dict[str, ArchSpec]:
+    return {name: get(name) for name in _MODULES}

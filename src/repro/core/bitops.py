@@ -1,0 +1,81 @@
+"""Bitset helpers.
+
+Host engine uses arbitrary-precision python ints as bitsets (C-speed AND /
+popcount via ``int.bit_count``), mirroring the paper's adjacency-bitmap
+implementations (BitCol/SDegree).  The device engine uses packed uint32 words;
+packing utilities here are shared by tests and the JAX path.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Sequence
+
+import numpy as np
+
+WORD = 32
+
+
+def bits(x: int) -> Iterator[int]:
+    """Iterate set bit positions of a python-int bitset (ascending)."""
+    while x:
+        lsb = x & -x
+        yield lsb.bit_length() - 1
+        x ^= lsb
+
+
+def popcount(x: int) -> int:
+    return x.bit_count()
+
+
+def mask_lt(i: int) -> int:
+    """Bits {0..i-1}."""
+    return (1 << i) - 1
+
+
+def mask_gt(i: int) -> int:
+    """Bits {i+1, i+2, ...} up to a practical width handled by callers."""
+    return -1 << (i + 1)  # python ints: arbitrarily wide; AND with cand clips
+
+
+def rows_from_pairs(num_vertices: int, pairs: Sequence[tuple]) -> List[int]:
+    rows = [0] * num_vertices
+    for a, b in pairs:
+        rows[a] |= 1 << b
+        rows[b] |= 1 << a
+    return rows
+
+
+def pack_rows(rows: Sequence[int], T: int) -> np.ndarray:
+    """python-int bitset rows -> (T, T//WORD) uint32 (pad with zeros)."""
+    W = (T + WORD - 1) // WORD
+    out = np.zeros((T, W), dtype=np.uint32)
+    full = (1 << WORD) - 1
+    for i, r in enumerate(rows):
+        for w in range(W):
+            out[i, w] = (r >> (w * WORD)) & full
+    return out
+
+
+def pack_mask(mask: int, T: int) -> np.ndarray:
+    W = (T + WORD - 1) // WORD
+    out = np.zeros((W,), dtype=np.uint32)
+    full = (1 << WORD) - 1
+    for w in range(W):
+        out[w] = (mask >> (w * WORD)) & full
+    return out
+
+
+def unpack_mask(words: np.ndarray) -> int:
+    x = 0
+    for w, v in enumerate(np.asarray(words, dtype=np.uint64).tolist()):
+        x |= int(v) << (w * WORD)
+    return x
+
+
+def dense_from_rows(rows: Sequence[int], T: int) -> np.ndarray:
+    """(T, T) {0,1} uint8 adjacency from python-int rows."""
+    out = np.zeros((T, T), dtype=np.uint8)
+    for i, r in enumerate(rows):
+        for j in bits(r):
+            if j < T:
+                out[i, j] = 1
+    return out

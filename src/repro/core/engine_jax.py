@@ -1,0 +1,177 @@
+"""Accelerator counting engine: tiles -> packed bitset batches -> kernels.
+
+Pipeline (the TPU-native EBBkC of DESIGN.md section 2):
+  1. host tile extraction (:mod:`repro.core.tiles`) under the chosen ordering;
+  2. size binning: tiles are bucketed into power-of-two tile sizes
+     T in {32, 64, 128, 256} so each batch is a fixed-shape (B, T, T/32)
+     uint32 array (lockstep SPMD wants tight bins -- the truss ordering makes
+     them tight, Lemma 4.1);
+  3. early-termination routing (Section 5, vectorized): per-tile plexity is a
+     popcount reduction; t<=2 tiles are answered by the closed-form
+     2-plex formula (exact int64 Pascal-table arithmetic, branch-free);
+  4. everything else goes to the Pallas kernels: MXU matmul base case for
+     l==3, bitset DFS for l>=4.
+
+``count_packed`` is the jit-able inner step used by the distributed launcher
+(`repro.launch.clique`): tile batches are sharded over the mesh data axes and
+the per-device partial counts are psum-reduced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .engine_np import Stats
+from .graph import Graph
+from . import tiles as tiles_mod
+from .bitops import pack_rows, pack_mask
+from ..kernels import ops as kops
+from ..kernels.common import pascal_table, popcount, unpack_bits
+
+_BINS = (32, 64, 128, 256)
+
+
+@dataclasses.dataclass
+class PackedTiles:
+    """One fixed-shape batch of bitset tiles."""
+    A: np.ndarray      # (B, T, W) uint32
+    cand: np.ndarray   # (B, W) uint32
+
+
+def pack_tiles(tiles: List[tiles_mod.Tile], T: int) -> PackedTiles:
+    B = len(tiles)
+    W = T // 32
+    A = np.zeros((B, T, W), dtype=np.uint32)
+    cand = np.zeros((B, W), dtype=np.uint32)
+    for i, t in enumerate(tiles):
+        A[i] = pack_rows(t.rows, T)
+        cand[i] = pack_mask((1 << t.s) - 1, T)
+    return PackedTiles(A, cand)
+
+
+def bin_tiles(g: Graph, k: int, order: str = "hybrid",
+              use_rule2: bool = True) -> Dict[int, PackedTiles]:
+    """Extract edge tiles and pack them into size bins."""
+    binned: Dict[int, List[tiles_mod.Tile]] = {}
+    for t in tiles_mod.edge_tiles(g, k, mode=order, use_rule2=use_rule2):
+        T = next((b for b in _BINS if t.s <= b), None)
+        if T is None:
+            raise ValueError(f"tile with {t.s} vertices exceeds max bin "
+                             f"{_BINS[-1]}; raise _BINS for this graph")
+        binned.setdefault(T, []).append(t)
+    return {T: pack_tiles(ts, T) for T, ts in sorted(binned.items())}
+
+
+# ---------------------------------------------------------------------------
+# vectorized early termination (closed-form 2-plex counting)
+# ---------------------------------------------------------------------------
+
+def plex_stats(A: jax.Array, cand: jax.Array) -> Tuple[jax.Array, ...]:
+    """Per tile: (nv, t, f) = size, plexity, #universal vertices."""
+    T = A.shape[1]
+    vbit = unpack_bits(cand, T)                       # (B, T)
+    deg = popcount(A & cand[:, None, :]).sum(-1)      # (B, T)
+    nv = popcount(cand).sum(-1)                       # (B,)
+    big = jnp.int32(1 << 30)
+    deg_v = jnp.where(vbit > 0, deg.astype(jnp.int32), big)
+    mind = jnp.min(deg_v, axis=-1)
+    mind = jnp.where(nv > 0, mind, 0)
+    t = nv.astype(jnp.int32) - mind
+    f = jnp.sum((deg.astype(jnp.int32) == nv[:, None].astype(jnp.int32) - 1)
+                & (vbit > 0), axis=-1)
+    return nv.astype(jnp.int32), t, f
+
+
+def count_2plex_closed_np(nv: np.ndarray, f: np.ndarray, l: int) -> np.ndarray:
+    """Closed-form Section 5.1 count; exact int64 on host (cheap, O(B*l))."""
+    table = pascal_table(int(max(nv.max(initial=0), 1)))
+    p = (nv - f) // 2
+    total = np.zeros(nv.shape, dtype=np.int64)
+    for c in range(0, l + 1):
+        j = l - c
+        cf = np.where(c <= f, table[f, np.minimum(c, f)], 0)
+        cp = np.where(j <= p, table[p, np.minimum(j, p)], 0)
+        total += cf * cp * (1 << j)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# public engine
+# ---------------------------------------------------------------------------
+
+def count_packed(A: jax.Array, cand: jax.Array, l: int,
+                 method: str = "auto", et: bool = True,
+                 interpret: Optional[bool] = None):
+    """Device step over one packed batch.
+
+    Returns (hard (B,) uint32 kernel counts with 2-plex tiles masked to 0,
+    nv, t, f) -- the host combines them with the exact int64 closed form.
+    All-device, no int64 (TPU-friendly); jit/pjit-able as a unit.
+    """
+    T = A.shape[1]
+    B = A.shape[0]
+    if l == 0:
+        one = jnp.ones(B, dtype=jnp.uint32)
+        z = jnp.zeros(B, dtype=jnp.int32)
+        return one, z, z, z
+    if l == 1:
+        n = popcount(cand).sum(-1).astype(jnp.uint32)
+        z = jnp.zeros(B, dtype=jnp.int32)
+        return n, z, z, z
+    if l == 2:
+        from ..kernels.ref import edges_within_ref
+        n = edges_within_ref(A, cand)
+        z = jnp.zeros(B, dtype=jnp.int32)
+        return n, z, z, z
+    nv, t, f = plex_stats(A, cand)
+    if et:
+        is2 = t <= 2
+        hard = kops.count_tiles(A, jnp.where(is2[:, None], jnp.uint32(0),
+                                             cand), l,
+                                method=method, interpret=interpret)
+    else:
+        hard = kops.count_tiles(A, cand, l, method=method,
+                                interpret=interpret)
+    return hard, nv, t, f
+
+
+def combine_counts(hard, nv, t, f, l: int, et: bool) -> int:
+    """Host-exact combination of the device step outputs."""
+    hard = np.asarray(hard).astype(np.int64)
+    if not et or l <= 2:
+        return int(hard.sum())
+    nv = np.asarray(nv)
+    t = np.asarray(t)
+    f = np.asarray(f)
+    is2 = t <= 2
+    closed = count_2plex_closed_np(nv[is2], f[is2], l)
+    return int(hard.sum() + closed.sum())
+
+
+def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
+          use_rule2: bool = True, method: str = "auto",
+          interpret: Optional[bool] = None, et_route: bool = True):
+    """Full-graph k-clique count on the accelerator engine."""
+    from .ebbkc import Result
+    stats = Stats()
+    if k == 1:
+        return Result(g.n, stats)
+    if k == 2:
+        return Result(g.m, stats)
+    total = 0
+    ntiles = 0
+    max_tile = 0
+    l = k - 2
+    et = et_route and et_t >= 2
+    for T, packed in bin_tiles(g, k, order, use_rule2).items():
+        ntiles += packed.A.shape[0]
+        max_tile = max(max_tile, T)
+        hard, nv, t, f = count_packed(
+            jnp.asarray(packed.A), jnp.asarray(packed.cand), l,
+            method=method, et=et, interpret=interpret)
+        total += combine_counts(hard, nv, t, f, l, et)
+    return Result(total, stats, ntiles, max_tile)

@@ -1,0 +1,234 @@
+"""Host branch-and-bound engines over python-int bitset tiles.
+
+These are the paper-faithful recursions (Algorithms 2-5) used for the
+benchmark suite, plus the VBBkC baseline (Algorithm 1 family).  Bitsets are
+python ints: AND / popcount run at C speed, mirroring the bitmap adjacency of
+BitCol / SDegree that the paper compares against.
+
+Three inner recursions:
+
+* ``count_rec_T``   -- truss-ordered edge-oriented branching with the
+                       explicit E(g)-filtered sub-branch construction of
+                       Algorithm 3 (ESet semantics).
+* ``count_rec_C``   -- color-ordered edge-oriented branching on a DAG
+                       (Algorithm 4), with pruning Rules (1) and (2).
+* ``count_rec_V``   -- vertex-oriented branching (Algorithm 1 = VBBkC) with
+                       optional color pruning (DDegCol+ ablation).
+
+All support early termination into ``repro.core.plex``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .bitops import bits, mask_gt, popcount
+from . import plex
+
+
+@dataclasses.dataclass
+class Stats:
+    branches: int = 0        # BB branches formed
+    et_hits: int = 0         # branches finished by early termination
+    pruned_size: int = 0     # pruned by |V(g)| < l
+    pruned_color: int = 0    # pruned by Rules (1)/(2)
+    peak_graph: int = 0      # largest branch graph seen (roofline proxy)
+
+
+def _count_edges(rows: Sequence[int], cand: int) -> int:
+    s = 0
+    for v in bits(cand):
+        s += popcount(rows[v] & cand & mask_gt(v))
+    return s
+
+
+def _try_et(rows: Sequence[int], cand: int, l: int, et_t: int,
+            stats: Stats, rec: Callable[[Sequence[int], int, int], int]
+            ) -> Optional[int]:
+    """Early termination (Section 5). Returns a count or None."""
+    if et_t < 2:
+        return None
+    nv, t = plex.plexity(rows, cand)
+    if nv == 0:
+        return 1 if l == 0 else 0
+    if t <= 2:
+        stats.et_hits += 1
+        return plex.count_in_2plex(rows, cand, l)
+    if t <= et_t:
+        # factor universal vertices combinatorially (Alg. 7 lines 8-10),
+        # finish the remainder with the generic recursion
+        stats.et_hits += 1
+        from math import comb
+        F, rest = plex.split_universal(rows, cand)
+        f = popcount(F)
+        total = 0
+        for c in range(0, min(l, f) + 1):
+            total += comb(f, c) * rec(rows, rest, l - c)
+        return total
+    return None
+
+
+# ---------------------------------------------------------------------------
+# EBBkC-C inner recursion (fixed tile adjacency, DAG by local index)
+# ---------------------------------------------------------------------------
+
+def count_rec_C(rows: Sequence[int], cand: int, l: int, stats: Stats,
+                colors: Optional[Sequence[int]] = None, et_t: int = 0,
+                use_rule2: bool = True) -> int:
+    nv = popcount(cand)
+    if nv < l:
+        stats.pruned_size += 1
+        return 0
+    if l == 0:
+        return 1
+    if l == 1:
+        return nv
+    if l == 2:
+        return _count_edges(rows, cand)
+    stats.peak_graph = max(stats.peak_graph, nv)
+    et = _try_et(rows, cand, l, et_t,
+                 stats, lambda r, c, ll: count_rec_C(r, c, ll, stats, colors,
+                                                     0, use_rule2))
+    if et is not None:
+        return et
+    total = 0
+    for u in bits(cand):
+        row_u = rows[u] & cand & mask_gt(u)
+        if colors is not None and colors[u] < l:  # Rule (1) part 1
+            stats.pruned_color += 1
+            continue
+        for v in bits(row_u):
+            if colors is not None and colors[v] < l - 1:  # Rule (1) part 2
+                stats.pruned_color += 1
+                continue
+            sub = cand & rows[u] & rows[v] & mask_gt(v)
+            stats.branches += 1
+            if colors is not None and use_rule2:
+                distinct = len({colors[w] for w in bits(sub)})
+                if distinct < l - 2:  # Rule (2)
+                    stats.pruned_color += 1
+                    continue
+            total += count_rec_C(rows, sub, l - 2, stats, colors, et_t,
+                                 use_rule2)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# EBBkC-T inner recursion (edge-list filtered sub-branches, Alg. 3 semantics)
+# ---------------------------------------------------------------------------
+
+def count_rec_T(edges: List[Tuple[int, int]], cand: int, num_local: int,
+                l: int, stats: Stats, et_t: int = 0) -> int:
+    """edges: local pairs sorted by global pi_tau rank; cand: vertex bitset."""
+    nv = popcount(cand)
+    if nv < l:
+        stats.pruned_size += 1
+        return 0
+    if l == 0:
+        return 1
+    if l == 1:
+        return nv
+    if l == 2:
+        return len(edges)
+    stats.peak_graph = max(stats.peak_graph, nv)
+    rows = [0] * num_local
+    for a, b in edges:
+        rows[a] |= 1 << b
+        rows[b] |= 1 << a
+    if et_t >= 2:
+        def rec(r, c, ll):
+            sub_edges = [(a, b) for (a, b) in edges
+                         if (c >> a) & 1 and (c >> b) & 1]
+            return count_rec_T(sub_edges, c, num_local, ll, stats, 0)
+        et = _try_et(rows, cand, l, et_t, stats, rec)
+        if et is not None:
+            return et
+    total = 0
+    for i, (a, b) in enumerate(edges):
+        rows[a] &= ~(1 << b)
+        rows[b] &= ~(1 << a)
+        sub = rows[a] & rows[b]          # common nbrs among edges ranked > i
+        stats.branches += 1
+        if popcount(sub) < l - 2:
+            stats.pruned_size += 1
+            continue
+        sub_edges = [(x, y) for (x, y) in edges[i + 1:]
+                     if (sub >> x) & 1 and (sub >> y) & 1]
+        total += count_rec_T(sub_edges, sub, num_local, l - 2, stats, et_t)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# VBBkC baseline inner recursion (Algorithm 1; optional color pruning)
+# ---------------------------------------------------------------------------
+
+def count_rec_V(rows: Sequence[int], cand: int, l: int, stats: Stats,
+                colors: Optional[Sequence[int]] = None, et_t: int = 0,
+                use_rule2: bool = False) -> int:
+    nv = popcount(cand)
+    if nv < l:
+        stats.pruned_size += 1
+        return 0
+    if l == 0:
+        return 1
+    if l == 1:
+        return nv
+    if l == 2:
+        return _count_edges(rows, cand)
+    stats.peak_graph = max(stats.peak_graph, nv)
+    et = _try_et(rows, cand, l, et_t,
+                 stats, lambda r, c, ll: count_rec_V(r, c, ll, stats, colors,
+                                                     0, use_rule2))
+    if et is not None:
+        return et
+    total = 0
+    for v in bits(cand):
+        if colors is not None and colors[v] < l:  # VBBkC color Rule (1)
+            stats.pruned_color += 1
+            continue
+        sub = cand & rows[v] & mask_gt(v)
+        stats.branches += 1
+        if colors is not None and use_rule2:
+            distinct = len({colors[w] for w in bits(sub)})
+            if distinct < l - 1:  # Rule (2) adapted to VBBkC (Sec. 4.3)
+                stats.pruned_color += 1
+                continue
+        total += count_rec_V(rows, sub, l - 1, stats, colors, et_t, use_rule2)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Listing variants (emit local-id tuples); used by the listing API and tests
+# ---------------------------------------------------------------------------
+
+def list_rec_C(rows: Sequence[int], cand: int, l: int, prefix: Tuple[int, ...],
+               out: List[Tuple[int, ...]], colors=None, et_t: int = 0) -> None:
+    nv = popcount(cand)
+    if nv < l:
+        return
+    if l == 0:
+        out.append(prefix)
+        return
+    if l == 1:
+        for v in bits(cand):
+            out.append(prefix + (v,))
+        return
+    if l == 2:
+        for v in bits(cand):
+            for w in bits(rows[v] & cand & mask_gt(v)):
+                out.append(prefix + (v, w))
+        return
+    if et_t >= 2:
+        nv2, t = plex.plexity(rows, cand)
+        if t <= 2:
+            for tup in plex.list_2plex(rows, cand, l):
+                out.append(prefix + tup)
+            return
+        if t <= et_t:
+            for tup in plex.list_tplex(rows, cand, l):
+                out.append(prefix + tup)
+            return
+    for u in bits(cand):
+        for v in bits(rows[u] & cand & mask_gt(u)):
+            sub = cand & rows[u] & rows[v] & mask_gt(v)
+            list_rec_C(rows, sub, l - 2, prefix + (u, v), out, colors, et_t)

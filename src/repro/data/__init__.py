@@ -1,0 +1,6 @@
+"""Deterministic, resumable, shard-aware synthetic data pipelines."""
+from .lm import LMDataPipeline
+from .graphs import (rmat_graph, powerlaw_graph, erdos_renyi, planted_cliques,
+                     GraphBatcher)
+from .recsys import RecsysPipeline
+from .sampler import NeighborSampler

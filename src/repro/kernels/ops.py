@@ -1,0 +1,54 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled Mosaic on TPU, interpret mode
+elsewhere (this container is CPU-only; interpret mode executes the kernel
+body in Python for correctness validation, per the deliverable spec).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import clique_count as _cc
+from . import intersect as _is
+from . import triangle_mm as _tm
+from . import ref as _ref
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def count_tiles(A: jax.Array, cand: jax.Array, l: int,
+                method: str = "auto", interpret: Optional[bool] = None
+                ) -> jax.Array:
+    """Count l-cliques per tile. (B,T,W) uint32 x (B,W) uint32 -> (B,) uint32.
+
+    method: "auto" routes l==3 to the MXU matmul kernel and other l to the
+    bitset DFS kernel; "dfs" / "mxu" / "ref" force a path.
+    """
+    interpret = _auto_interpret(interpret)
+    if method == "ref":
+        return _ref.clique_count_tiles_ref(A, cand, l)
+    if method == "mxu" or (method == "auto" and l == 3):
+        if l != 3:
+            raise ValueError("mxu path implements the l==3 base case only")
+        return _tm.triangle_count_tiles(A, cand, interpret=interpret)
+    if l <= 2:
+        return (_ref.clique_count_tiles_ref(A, cand, l) if l <= 2 else None)
+    return _cc.clique_count_tiles(A, cand, l, interpret=interpret)
+
+
+def triangles(A: jax.Array, cand: jax.Array,
+              interpret: Optional[bool] = None) -> jax.Array:
+    return _tm.triangle_count_tiles(A, cand,
+                                    interpret=_auto_interpret(interpret))
+
+
+def edge_candidates(A: jax.Array, pairs: jax.Array,
+                    interpret: Optional[bool] = None):
+    return _is.edge_candidates(A, pairs, interpret=_auto_interpret(interpret))

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every kernel (the reference the Pallas kernels must
+match bit-exactly; also used directly by tests and as a CPU fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import gt_masks_np, num_words, popcount, unpack_bits
+
+
+def edges_within_ref(A: jax.Array, cand: jax.Array) -> jax.Array:
+    """(B,T,W),(B,W) -> (B,) edge count of cand-induced subgraph."""
+    B, T, W = A.shape
+    gt = jnp.asarray(gt_masks_np(T))
+    rows = A & cand[:, None, :] & gt[None]
+    per_v = popcount(rows).sum(-1)                      # (B, T)
+    vbit = unpack_bits(cand, T)                         # (B, T)
+    return (per_v * vbit).sum(-1).astype(jnp.uint32)
+
+
+def triangle_count_tiles_ref(A: jax.Array, cand: jax.Array) -> jax.Array:
+    B, T, W = A.shape
+    M = unpack_bits(A, T).astype(jnp.float32)
+    c = unpack_bits(cand, T).astype(jnp.float32)
+    M = M * c[:, :, None] * c[:, None, :]
+    tri = jnp.einsum("bij,bjk,bik->b", M, M, M) / 6.0
+    return tri.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("l",))
+def clique_count_tiles_ref(A: jax.Array, cand: jax.Array, l: int) -> jax.Array:
+    """Vectorized expansion recursion (memory O(B * T^(l-2)); tests only)."""
+    B, T, W = A.shape
+    gt = jnp.asarray(gt_masks_np(T))
+    if l == 1:
+        return popcount(cand).sum(-1).astype(jnp.uint32)
+    if l == 2:
+        return edges_within_ref(A, cand)
+    subs = cand[:, None, :] & A & gt[None]              # (B, T, W)
+    vbit = unpack_bits(cand, T)                         # (B, T)
+    A_rep = jnp.repeat(A, T, axis=0)                    # (B*T, T, W)
+    inner = clique_count_tiles_ref(A_rep, subs.reshape(B * T, W), l - 1)
+    return (inner.reshape(B, T) * vbit).sum(-1).astype(jnp.uint32)
+
+
+def edge_candidates_ref(A: jax.Array, pairs: jax.Array):
+    B, T, W = A.shape
+    gt = jnp.asarray(gt_masks_np(T))
+    row_a = jnp.take_along_axis(A, pairs[:, 0][:, None, None].astype(jnp.int32)
+                                .repeat(W, axis=2), axis=1)[:, 0]
+    row_b = jnp.take_along_axis(A, pairs[:, 1][:, None, None].astype(jnp.int32)
+                                .repeat(W, axis=2), axis=1)[:, 0]
+    gt_b = gt[pairs[:, 1].astype(jnp.int32)]
+    cand = row_a & row_b & gt_b
+    return cand, popcount(cand).sum(-1).astype(jnp.uint32)

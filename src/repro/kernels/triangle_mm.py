@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: batched masked triangle counting on the MXU.
+
+Beyond-paper optimization (see EXPERIMENTS.md section Perf): the l==3 base
+case of the clique DFS -- by far the most-executed branch shape -- is
+reformulated from bitset intersections (VPU, ~T*W word-ops per vertex) to a
+dense masked matmul (MXU):
+
+    tri(tile) = sum((M @ M) * M) / 6,   M = unpack(A) * cand * cand^T
+
+TPU MXU does the (T, T) @ (T, T) product at bf16/f32 throughput; for T=128
+this is 2*128^3 = 4.2 MFLOP per tile at 197 TFLOP/s vs ~T^2*W = 2k word-ops
+on the VPU.  The kernel processes a block of BT tiles per program so the MXU
+sees a well-shaped batch.
+
+Exactness: counts accumulate in f32; per-tile triangle count <= C(128, 3)
+= 341k < 2^24, so f32 is exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import num_words, unpack_bits
+
+
+def _kernel(A_ref, cand_ref, out_ref, *, T: int, BT: int, dtype):
+    A = A_ref[...]                              # (BT, T, W) uint32
+    cand = cand_ref[...]                        # (BT, W)
+    # candidate masking entirely in the packed-bit domain (word AND for
+    # columns, predicated rows): ONE unpack, no (BT,T,T) float mask passes
+    Am = A & cand[:, None, :]                   # column mask, uint32 words
+    cbit = unpack_bits(cand, T)                 # (BT, T) {0,1}
+    Am = jnp.where(cbit[:, :, None] > 0, Am, jnp.uint32(0))  # row mask
+    M = unpack_bits(Am, T).astype(dtype)        # (BT, T, T) fully masked
+    # {0,1} operands: bf16 is exact and native MXU dtype; accumulate f32
+    P = jax.lax.dot_general(
+        M, M, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)     # (BT, T, T) batched matmul
+    tri = jnp.einsum("bij,bij->b", P, M.astype(jnp.float32)) / 6.0
+    out_ref[...] = tri.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "dtype"))
+def triangle_count_tiles(A: jax.Array, cand: jax.Array, block: int = 8,
+                         interpret: bool = True,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    """(B, T, W) uint32, (B, W) uint32 -> (B,) uint32 triangle counts."""
+    B, T, W = A.shape
+    assert W == num_words(T) and cand.shape == (B, W)
+    BT = min(block, B)
+    pad = (-B) % BT
+    if pad:
+        A = jnp.pad(A, ((0, pad), (0, 0), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+    Bp = B + pad
+    kernel = functools.partial(_kernel, T=T, BT=BT, dtype=dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // BT,),
+        in_specs=[
+            pl.BlockSpec((BT, T, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((BT, W), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((BT,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.uint32),
+        interpret=interpret,
+    )(A, cand)
+    return out[:B]

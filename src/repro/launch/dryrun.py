@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-touching import)
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and record memory / cost / collective
+analyses for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --arch all
+
+Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json (resumable: cells
+with an existing artifact are skipped unless --force).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from .mesh import make_production_mesh
+from .roofline import collective_bytes, roofline_terms, model_flops_lm
+from .steps import build_cell
+
+
+def _measure(spec, shape, mesh):
+    """Lower+compile one cell variant; return (flops, bytes, coll_bytes)."""
+    cell = build_cell(spec, shape, mesh)
+    jitted = jax.jit(cell.step_fn, in_shardings=cell.in_specs,
+                     out_shardings=cell.out_specs)
+    compiled = jitted.lower(*cell.abstract_args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(sum(v["operand_bytes"] for v in coll.values())))
+
+
+def lm_probe_costs(spec, shape, mesh):
+    """True per-step cost via unrolled small-depth probes.
+
+    XLA's cost_analysis counts while-loop (scan) bodies ONCE, so the
+    production scan-over-layers lowering under-reports FLOPs by ~n_layers.
+    Cost is affine in the per-group layer counts: probe with unrolled
+    models at counts (1,..), (2,1,..), (1,2,..), solve the affine model,
+    extrapolate to the real depth.  (Discovered+validated in the first
+    perf iteration -- EXPERIMENTS.md section Perf.)
+    """
+    cfg = spec.full
+    groups = cfg.layer_groups
+    G = len(groups)
+
+    def probe_spec(counts):
+        cfg_p = dataclasses.replace(
+            cfg, analysis_unroll=True,
+            groups_override=tuple((k, c) for (k, _), c
+                                  in zip(groups, counts)))
+        return dataclasses.replace(spec, full=cfg_p)
+
+    base = _measure(probe_spec([1] * G), shape, mesh)
+    slopes = []
+    for i in range(G):
+        counts = [2 if j == i else 1 for j in range(G)]
+        got = _measure(probe_spec(counts), shape, mesh)
+        slopes.append(tuple(g - b for g, b in zip(got, base)))
+    out = []
+    for t in range(3):  # flops, bytes, coll
+        a = base[t] - sum(s[t] for s in slopes)
+        val = a + sum(s[t] * c for s, (_, c) in zip(slopes, groups))
+        out.append(max(val, 0.0))
+    return {"flops": out[0], "bytes_accessed": out[1],
+            "collective_operand_bytes": out[2],
+            "probe_groups": [list(g) for g in groups]}
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
+             force: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    spec = configs.get(arch)
+    cell_cfg = spec.cells[shape]
+    record = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "kind": cell_cfg.kind, "dims": cell_cfg.dims}
+    if cell_cfg.skip:
+        record.update(status="skipped", reason=cell_cfg.skip)
+        _write(path, record)
+        return record
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        t0 = time.time()
+        cell = build_cell(spec, shape, mesh)
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_specs,
+                         out_shardings=cell.out_specs)
+        lowered = jitted.lower(*cell.abstract_args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # CPU backend may not support it
+            mem["error"] = str(e)
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            keep = ("flops", "bytes accessed", "transcendentals",
+                    "optimal_seconds", "utilization")
+            cost = {k: float(v) for k, v in ca.items()
+                    if isinstance(v, (int, float)) and k in keep}
+        except Exception as e:
+            cost["error"] = str(e)
+        text = compiled.as_text()
+        coll = collective_bytes(text)
+        coll_total = sum(v["operand_bytes"] for v in coll.values())
+        flops = cost.get("flops", 0.0)
+        bytes_acc = cost.get("bytes accessed", 0.0)
+        # LM models scan over layers; correct the once-counted loop bodies
+        # via unrolled probes (affine in per-group depth)
+        if spec.family == "lm":
+            t3 = time.time()
+            probe = lm_probe_costs(spec, shape, mesh)
+            record["probe"] = probe
+            record["probe_s"] = round(time.time() - t3, 3)
+            flops = probe["flops"]
+            bytes_acc = probe["bytes_accessed"]
+            coll_total = probe["collective_operand_bytes"]
+        terms = roofline_terms(max(flops, 0.0), max(bytes_acc, 0.0),
+                               coll_total)
+        record.update(
+            status="ok",
+            lower_s=round(t1 - t0, 3), compile_s=round(t2 - t1, 3),
+            n_devices=len(mesh.devices.flat),
+            memory=mem, cost=cost, collectives=coll,
+            flops_per_device=flops, bytes_per_device=bytes_acc,
+            collective_operand_bytes=coll_total,
+            roofline=terms, meta=cell.meta,
+        )
+        if spec.family == "lm":
+            mf = model_flops_lm(cell.meta, cell_cfg.kind)
+            record["model_flops_global"] = mf
+            n_dev = len(mesh.devices.flat)
+            if flops > 0:
+                record["model_over_hlo_flops"] = mf / (flops * n_dev)
+    except Exception as e:
+        record.update(status="error", error=str(e),
+                      traceback=traceback.format_exc())
+    _write(path, record)
+    if verbose:
+        stat = record["status"]
+        extra = ""
+        if stat == "ok":
+            r = record["roofline"]
+            extra = (f" compile={record['compile_s']}s"
+                     f" flops/dev={record['cost'].get('flops', 0):.3e}"
+                     f" dominant={r['dominant']}")
+        print(f"[{mesh_name}] {arch}/{shape}: {stat}{extra}", flush=True)
+    return record
+
+
+def _write(path, record):
+    with open(path + ".tmp", "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    os.replace(path + ".tmp", path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(configs.all_specs()) if args.arch == "all" else [args.arch]
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            spec = configs.get(arch)
+            shapes = list(spec.cells) if args.shape == "all" \
+                else [args.shape]
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_name, args.out, args.force)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"dry-run done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

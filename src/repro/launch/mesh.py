@@ -1,0 +1,28 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+A function, not a module-level constant: importing this module never
+touches jax device state."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} "
+            f"(dryrun.py sets xla_force_host_platform_device_count)")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many devices exist (tests / smoke)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)

@@ -1,0 +1,112 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-like, per assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds, per device -- the compiled module is the per-device SPMD
+program, so its FLOPs/bytes are already per-chip):
+  compute    = flops / peak_flops
+  memory     = bytes_accessed / hbm_bw
+  collective = collective_operand_bytes / ici_bw
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12         # bf16 FLOP/s per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link (1 link assumed conservative)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective-op-kind: instruction count + operand & result bytes.
+
+    HLO text prints operands as bare SSA refs, so operand bytes are derived
+    from the result shape + op semantics:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather: operand = result / group_size
+      reduce-scatter: operand = result * group_size
+    """
+    out = {k: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+           for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for op in _COLL_OPS:
+            # match "= <ty> op(" and async "op-start("
+            m = re.search(rf"= (.*?)\b{op}(?:-start)?\(", s)
+            if not m:
+                continue
+            if f"{op}-done" in s:
+                continue
+            result_part = m.group(1)
+            rb = sum(_shape_bytes(t, d)
+                     for t, d in _SHAPE_RE.findall(result_part))
+            g = _group_size(s)
+            if op == "all-gather":
+                ob = rb // max(g, 1)
+            elif op == "reduce-scatter":
+                ob = rb * g
+            else:
+                ob = rb
+            out[op]["count"] += 1
+            out[op]["operand_bytes"] += ob
+            out[op]["result_bytes"] += rb
+            break
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_operand_bytes: float) -> Dict[str, float]:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = coll_operand_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    total = max(compute, memory, collective)
+    terms["bound_s"] = total
+    for k in ("compute_s", "memory_s", "collective_s"):
+        terms[f"frac_{k[:-2]}"] = (terms[k] / total) if total > 0 else 0.0
+    return terms
+
+
+def model_flops_lm(meta: Dict, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: per token."""
+    n = meta.get("active_params") or meta.get("model_params") or 0
+    toks = meta.get("tokens_per_step", 0)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * toks

@@ -1,0 +1,577 @@
+"""Per-family step functions + abstract inputs + shardings for every
+(architecture x shape) cell.  Used by dryrun.py (lower+compile), train.py
+and serve.py (real execution at reduced scale)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchSpec, ShapeCell
+from ..models import transformer as tr
+from ..models import gnn as gnn_mod
+from ..models import equivariant as eqv
+from ..models import recsys as rec
+from ..optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from ..sharding.rules import transformer_param_specs, transformer_cache_specs
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape) cell."""
+    step_fn: Callable
+    abstract_args: Tuple
+    in_specs: Tuple
+    out_specs: Any
+    meta: Dict[str, Any]
+
+
+def _axes_in_mesh(mesh: Optional[Mesh], axes: Tuple[str, ...]):
+    if mesh is None:
+        return None
+    have = [a for a in axes if a in mesh.axis_names]
+    if not have:
+        return None
+    return tuple(have) if len(have) > 1 else have[0]
+
+
+def _filter_spec(spec: P, mesh: Optional[Mesh]) -> P:
+    """Drop mesh axes that don't exist on this mesh (pod on single-pod)."""
+    if mesh is None:
+        return P()
+    parts = []
+    for part in spec:
+        if part is None:
+            parts.append(None)
+        elif isinstance(part, str):
+            parts.append(part if part in mesh.axis_names else None)
+        else:
+            kept = tuple(a for a in part if a in mesh.axis_names)
+            parts.append(kept if len(kept) > 1 else
+                         (kept[0] if kept else None))
+    return P(*parts)
+
+
+def _sharding_tree(mesh: Optional[Mesh], spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _filter_spec(s, mesh)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_specs(param_specs):
+    return {"mu": param_specs, "nu": param_specs, "count": P()}
+
+
+DATA_AXES = ("pod", "data")
+ALL_AXES = ("pod", "data", "model")
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _model_size(mesh: Optional[Mesh]) -> int:
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def _lm_ctx(mesh: Optional[Mesh], cfg=None) -> tr.ShardCtx:
+    if mesh is None:
+        return tr.ShardCtx(mesh=None)
+    da = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    lspecs = None
+    if cfg is not None:
+        from ..sharding.rules import transformer_layer_specs
+        lspecs = transformer_layer_specs(cfg, _model_size(mesh))
+    return tr.ShardCtx(mesh=mesh, data_axes=da, model_axis="model",
+                       layer_specs=lspecs)
+
+
+def lm_train_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
+                  reduced: bool = False, microbatches: int = 16) -> Cell:
+    cfg: tr.TransformerConfig = spec.reduced if reduced else spec.full
+    ctx = _lm_ctx(mesh, cfg)
+    B, S = cell.dims["global_batch"], cell.dims["seq_len"]
+    if reduced:
+        B, S = 2, min(S, 64)
+        microbatches = 1
+    M = microbatches if B % microbatches == 0 else 1
+    opt_cfg = AdamWConfig(lr=3e-4, schedule=cosine_schedule(100, 10000))
+
+    def step(params, opt_state, batch):
+        """Gradient-accumulated train step: M microbatches keep per-pass
+        activation residuals (the scan carry x per layer) at 1/M of the
+        global batch -- the knob that fits 132B-scale training in HBM."""
+        def one_micro(carry, mb):
+            g_acc, loss_acc = carry
+            loss, g = jax.value_and_grad(
+                lambda p: tr.loss_fn(p, mb, cfg, ctx))(params)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            return (g_acc, loss_acc + loss), None
+
+        mb_batch = jax.tree.map(
+            lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(
+            one_micro, (zeros, jnp.float32(0.0)), mb_batch,
+            unroll=M if cfg.analysis_unroll else 1)
+        grads = jax.tree.map(lambda g: g / M, grads)
+        loss = loss / M
+        params, opt_state, m = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **m}
+
+    params_abs = jax.eval_shape(
+        lambda k: tr.init_params(k, cfg), jax.random.PRNGKey(0))
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    pspec = transformer_param_specs(cfg, model_size=_model_size(mesh))
+    bspec = {"tokens": P(DATA_AXES, None), "labels": P(DATA_AXES, None)}
+    mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return Cell(
+        step_fn=step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_specs=(_sharding_tree(mesh, pspec),
+                  _sharding_tree(mesh, _opt_specs(pspec)),
+                  _sharding_tree(mesh, bspec)),
+        out_specs=(_sharding_tree(mesh, pspec),
+                   _sharding_tree(mesh, _opt_specs(pspec)),
+                   _sharding_tree(mesh, mspec)),
+        meta={"tokens_per_step": B * S,
+              "model_params": cfg.num_params(),
+              "active_params": cfg.active_params()},
+    )
+
+
+def lm_prefill_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
+                    reduced: bool = False) -> Cell:
+    cfg = spec.reduced if reduced else spec.full
+    ctx = _lm_ctx(mesh, cfg)
+    B, S = cell.dims["global_batch"], cell.dims["seq_len"]
+    if reduced:
+        B, S = 2, min(S, 64)
+
+    def step(params, tokens):
+        return tr.prefill(params, tokens, cfg, max_len=S, ctx=ctx)
+
+    params_abs = jax.eval_shape(
+        lambda k: tr.init_params(k, cfg), jax.random.PRNGKey(0))
+    tok_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    pspec = transformer_param_specs(cfg, model_size=_model_size(mesh))
+    cspec = transformer_cache_specs(cfg, model_size=_model_size(mesh))
+    logit_spec = P(DATA_AXES, "model")
+    return Cell(
+        step_fn=step,
+        abstract_args=(params_abs, tok_abs),
+        in_specs=(_sharding_tree(mesh, pspec),
+                  _sharding_tree(mesh, {"t": P(DATA_AXES, None)})["t"]
+                  if mesh else None),
+        out_specs=(_sharding_tree(mesh, {"l": logit_spec})["l"]
+                   if mesh else None,
+                   _sharding_tree(mesh, cspec)),
+        meta={"tokens_per_step": B * S,
+              "model_params": cfg.num_params(),
+              "active_params": cfg.active_params()},
+    )
+
+
+def lm_decode_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
+                   reduced: bool = False) -> Cell:
+    cfg = spec.reduced if reduced else spec.full
+    ctx = _lm_ctx(mesh, cfg)
+    B, S = cell.dims["global_batch"], cell.dims["seq_len"]
+    if reduced:
+        B, S = 2, min(S, 64)
+    long_ctx = B == 1  # long_500k: shard the KV length, not the batch
+
+    def step(params, cache, tokens, lengths):
+        return tr.decode_step(params, cache, tokens, lengths, cfg, ctx)
+
+    params_abs = jax.eval_shape(
+        lambda k: tr.init_params(k, cfg), jax.random.PRNGKey(0))
+    cache_abs = jax.eval_shape(
+        functools.partial(tr.init_cache, cfg, B, S))
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    len_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pspec = transformer_param_specs(cfg, model_size=_model_size(mesh))
+    kv_shardable = cfg.n_kv_heads % max(_model_size(mesh), 1) == 0
+    if long_ctx:
+        kv = P(None, None, DATA_AXES, "model" if kv_shardable else None,
+               None)
+        cspec = {kind: {"k": kv, "v": kv} for kind, _ in cfg.layer_groups}
+        tspec, lspec = P(None, None), P(None)
+        ologit = P(None, "model")
+    else:
+        if kv_shardable:
+            kv = P(None, DATA_AXES, None, "model", None)
+        else:
+            # GQA with kv < TP: shard the cache *length* over the model
+            # axis instead (a replicated 32k cache is 100+ GB/device)
+            kv = P(None, DATA_AXES, "model", None, None)
+        cspec = {kind: {"k": kv, "v": kv} for kind, _ in cfg.layer_groups}
+        tspec, lspec = P(DATA_AXES, None), P(DATA_AXES)
+        ologit = P(DATA_AXES, "model")
+    return Cell(
+        step_fn=step,
+        abstract_args=(params_abs, cache_abs, tok_abs, len_abs),
+        in_specs=(_sharding_tree(mesh, pspec), _sharding_tree(mesh, cspec),
+                  _sharding_tree(mesh, {"x": tspec})["x"] if mesh else None,
+                  _sharding_tree(mesh, {"x": lspec})["x"] if mesh else None),
+        out_specs=(_sharding_tree(mesh, {"x": ologit})["x"] if mesh else None,
+                   _sharding_tree(mesh, cspec)),
+        meta={"tokens_per_step": B,
+              "kv_cache_tokens": S,
+              "model_params": cfg.num_params(),
+              "active_params": cfg.active_params()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _pad_up(x: int, mult: int = 512) -> int:
+    """Graph batches are padded to a multiple of the full mesh size (the
+    data pipeline emits edge_mask/padded isolated nodes); production
+    sharding requires divisibility."""
+    return -(-x // mult) * mult
+
+
+def _gnn_batch_abs(spec: ArchSpec, cell: ShapeCell, reduced: bool):
+    d = dict(cell.dims)
+    if "batch" in d:      # molecule: batched small graphs
+        B = 4 if reduced else d["batch"]
+        N = d["n_nodes"] * B
+        E = d["n_edges"] * B
+        n_graphs = B
+    elif "batch_nodes" in d:   # sampled minibatch: union block graph
+        bn = 64 if reduced else d["batch_nodes"]
+        f0, f1 = d["fanout0"], d["fanout1"]
+        N = bn + bn * f0 + bn * f0 * f1
+        E = bn * f0 + bn * f0 * f1
+        n_graphs = 1
+    else:
+        N = 128 if reduced else d["n_nodes"]
+        E = 512 if reduced else d["n_edges"]
+        n_graphs = 1
+    if not reduced:
+        N, E = _pad_up(N), _pad_up(E)
+    d_feat = 8 if reduced else d.get("d_feat", 16)
+    n_classes = d.get("n_classes", 2)
+    return N, E, d_feat, n_classes, n_graphs
+
+
+def _gnn_wsc(mesh: Optional[Mesh]):
+    """Sharding-constraint callback for GNN internals: node/edge arrays stay
+    sharded over all mesh axes through gather/scatter (without this, GSPMD
+    materializes full replicated node arrays per layer -- measured ~5 GB/
+    layer on ogb_products; EXPERIMENTS.md section Perf)."""
+    if mesh is None:
+        return lambda x, kind: x
+    axes = tuple(a for a in ALL_AXES if a in mesh.axis_names)
+
+    def wsc(x, kind):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return wsc
+
+
+def gnn_train_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
+                   reduced: bool = False) -> Cell:
+    N, E, d_feat, n_classes, n_graphs = _gnn_batch_abs(spec, cell, reduced)
+    base = spec.reduced if reduced else spec.full
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    name = spec.name
+    wsc = _gnn_wsc(mesh)
+
+    if name == "gin-tu":
+        cfg = dataclasses.replace(base, d_in=d_feat, n_classes=n_classes,
+                                  graph_level=False)
+        init = lambda k: gnn_mod.init_gin(k, cfg)
+
+        def loss_of(params, batch):
+            logits = gnn_mod.gin_forward(params, batch["nodes"],
+                                         batch["edges"], batch["edge_mask"],
+                                         cfg, wsc=wsc)
+            oh = jax.nn.one_hot(batch["labels"], cfg.n_classes)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            return -(oh * logp).sum(-1).mean()
+
+        batch_abs = {
+            "nodes": jax.ShapeDtypeStruct((N, d_feat), jnp.float32),
+            "edges": jax.ShapeDtypeStruct((2, E), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((E,), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((N,), jnp.int32),
+        }
+        bspec = {"nodes": P(ALL_AXES, None), "edges": P(None, ALL_AXES),
+                 "edge_mask": P(ALL_AXES), "labels": P(ALL_AXES)}
+    elif name == "meshgraphnet":
+        d_edge = 4
+        cfg = dataclasses.replace(base, d_node_in=d_feat, d_edge_in=d_edge,
+                                  d_out=n_classes,
+                                  scan_layers=not reduced)
+        init = lambda k: gnn_mod.init_mgn(k, cfg)
+
+        def loss_of(params, batch):
+            out = gnn_mod.mgn_forward(params, batch["nodes"],
+                                      batch["edge_feats"], batch["edges"],
+                                      batch["edge_mask"], cfg, wsc=wsc)
+            return jnp.mean((out - batch["targets"]) ** 2)
+
+        batch_abs = {
+            "nodes": jax.ShapeDtypeStruct((N, d_feat), jnp.float32),
+            "edge_feats": jax.ShapeDtypeStruct((E, d_edge), jnp.float32),
+            "edges": jax.ShapeDtypeStruct((2, E), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((E,), jnp.float32),
+            "targets": jax.ShapeDtypeStruct((N, n_classes), jnp.float32),
+        }
+        bspec = {"nodes": P(ALL_AXES, None),
+                 "edge_feats": P(ALL_AXES, None),
+                 "edges": P(None, ALL_AXES), "edge_mask": P(ALL_AXES),
+                 "targets": P(ALL_AXES, None)}
+    elif name == "egnn":
+        cfg = dataclasses.replace(base, d_in=d_feat, d_out=1)
+        init = lambda k: gnn_mod.init_egnn(k, cfg)
+
+        def loss_of(params, batch):
+            out, _ = gnn_mod.egnn_forward(
+                params, batch["nodes"], batch["pos"], batch["edges"],
+                batch["edge_mask"], cfg, batch["graph_ids"], n_graphs,
+                wsc=wsc)
+            return jnp.mean((out[:, 0] - batch["energy"]) ** 2)
+
+        batch_abs = {
+            "nodes": jax.ShapeDtypeStruct((N, d_feat), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((N, 3), jnp.float32),
+            "edges": jax.ShapeDtypeStruct((2, E), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((E,), jnp.float32),
+            "graph_ids": jax.ShapeDtypeStruct((N,), jnp.int32),
+            "energy": jax.ShapeDtypeStruct((n_graphs,), jnp.float32),
+        }
+        bspec = {"nodes": P(ALL_AXES, None), "pos": P(ALL_AXES, None),
+                 "edges": P(None, ALL_AXES), "edge_mask": P(ALL_AXES),
+                 "graph_ids": P(ALL_AXES), "energy": P(None)}
+    elif name == "nequip":
+        cfg = dataclasses.replace(base, scan_layers=not reduced)
+
+        def init(k):
+            return eqv.init_nequip(k, cfg)
+
+        def loss_of(params, batch):
+            out = eqv.nequip_forward(
+                params, batch["species"], batch["pos"], batch["edges"],
+                batch["edge_mask"], cfg, batch["graph_ids"], n_graphs,
+                wsc=wsc)
+            return jnp.mean((out[:, 0] - batch["energy"]) ** 2)
+
+        batch_abs = {
+            "species": jax.ShapeDtypeStruct((N, cfg.n_species), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((N, 3), jnp.float32),
+            "edges": jax.ShapeDtypeStruct((2, E), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((E,), jnp.float32),
+            "graph_ids": jax.ShapeDtypeStruct((N,), jnp.int32),
+            "energy": jax.ShapeDtypeStruct((n_graphs,), jnp.float32),
+        }
+        bspec = {"species": P(ALL_AXES, None), "pos": P(ALL_AXES, None),
+                 "edges": P(None, ALL_AXES), "edge_mask": P(ALL_AXES),
+                 "graph_ids": P(ALL_AXES), "energy": P(None)}
+    else:
+        raise KeyError(name)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        params, opt_state, m = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **m}
+
+    params_abs = jax.eval_shape(init, jax.random.PRNGKey(0))
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    rp = jax.tree.map(lambda _: P(), params_abs)
+    mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return Cell(
+        step_fn=step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_specs=(_sharding_tree(mesh, rp),
+                  _sharding_tree(mesh, _opt_specs(rp)),
+                  _sharding_tree(mesh, bspec)),
+        out_specs=(_sharding_tree(mesh, rp),
+                   _sharding_tree(mesh, _opt_specs(rp)),
+                   _sharding_tree(mesh, mspec)),
+        meta={"n_nodes": N, "n_edges": E},
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
+                reduced: bool = False) -> Cell:
+    cfg: rec.DCNConfig = spec.reduced if reduced else spec.full
+    kind = cell.kind
+    B = cell.dims.get("batch", 256)
+    if reduced:
+        B = min(B, 16)
+    opt_cfg = AdamWConfig(lr=1e-3)
+
+    params_abs = jax.eval_shape(
+        lambda k: rec.init_dcn(k, cfg), jax.random.PRNGKey(0))
+    pspec = jax.tree.map(lambda _: P(), params_abs)
+    pspec["table"] = P("model", None)
+    dense_abs = jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32)
+    sparse_abs = jax.ShapeDtypeStruct((B, cfg.n_sparse, cfg.bag), jnp.int32)
+    bspec_d, bspec_s = P(DATA_AXES, None), P(DATA_AXES, None, None)
+
+    if kind == "train":
+        def step(params, opt_state, batch):
+            def lf(p):
+                logits = rec.dcn_forward(p, batch["dense"], batch["sparse"],
+                                         cfg)
+                return rec.bce_loss(logits, batch["labels"])
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, m = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+            return params, opt_state, {"loss": loss, **m}
+
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        batch_abs = {"dense": dense_abs, "sparse": sparse_abs,
+                     "labels": jax.ShapeDtypeStruct((B,), jnp.float32)}
+        bspec = {"dense": bspec_d, "sparse": bspec_s, "labels": P(DATA_AXES)}
+        mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+        return Cell(step, (params_abs, opt_abs, batch_abs),
+                    (_sharding_tree(mesh, pspec),
+                     _sharding_tree(mesh, _opt_specs(pspec)),
+                     _sharding_tree(mesh, bspec)),
+                    (_sharding_tree(mesh, pspec),
+                     _sharding_tree(mesh, _opt_specs(pspec)),
+                     _sharding_tree(mesh, mspec)),
+                    meta={"batch": B})
+    if kind == "serve":
+        def step(params, dense, sparse):
+            return rec.dcn_forward(params, dense, sparse, cfg)
+
+        return Cell(step, (params_abs, dense_abs, sparse_abs),
+                    (_sharding_tree(mesh, pspec),
+                     _sharding_tree(mesh, {"x": bspec_d})["x"] if mesh else None,
+                     _sharding_tree(mesh, {"x": bspec_s})["x"] if mesh else None),
+                    _sharding_tree(mesh, {"x": P(DATA_AXES)})["x"]
+                    if mesh else None,
+                    meta={"batch": B})
+    if kind == "retrieval":
+        n_cand = cell.dims["n_candidates"]
+        if reduced:
+            n_cand = 4096
+        dt = cfg.mlp_dims[-1]
+        cand_abs = jax.ShapeDtypeStruct((n_cand, dt), jnp.float32)
+
+        def step(params, dense, sparse, cand):
+            v, i = rec.retrieval_scores(params, dense, sparse, cand, cfg,
+                                        topk=min(100, n_cand))
+            return (v, i)
+
+        ospec = (P(None, None), P(None, None))
+        return Cell(step, (params_abs, dense_abs, sparse_abs, cand_abs),
+                    (_sharding_tree(mesh, pspec),
+                     _sharding_tree(mesh, {"x": P(None, None)})["x"]
+                     if mesh else None,
+                     _sharding_tree(mesh, {"x": P(None, None, None)})["x"]
+                     if mesh else None,
+                     _sharding_tree(mesh, {"x": P("model", None)})["x"]
+                     if mesh else None),
+                    _sharding_tree(mesh, ospec),
+                    meta={"batch": B, "n_candidates": n_cand})
+    raise KeyError(kind)
+
+
+# ---------------------------------------------------------------------------
+# clique-engine cells (the paper's own arch)
+# ---------------------------------------------------------------------------
+
+def clique_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
+                reduced: bool = False) -> Cell:
+    from ..core import engine_jax
+    d = dict(cell.dims)
+    B = 256 if reduced else d["n_tiles"]
+    T = 32 if reduced else d["T"]
+    l = d["l"]
+    W = T // 32
+    method = "mxu" if l == 3 else "ref"
+
+    def local_count(A, cand):
+        hard, nv, t, f = engine_jax.count_packed(
+            A, cand, l, method=method, et=True, interpret=True)
+        total = hard.astype(jnp.float32).sum()
+        if mesh is not None:
+            total = jax.lax.psum(total, ALL_AXES[-len(mesh.axis_names):])
+        return total, nv, t, f
+
+    if mesh is None:
+        step = local_count
+    else:
+        axes = tuple(a for a in ALL_AXES if a in mesh.axis_names)
+
+        def step(A, cand):
+            def inner(A_loc, cand_loc):
+                hard, nv, t, f = engine_jax.count_packed(
+                    A_loc, cand_loc, l, method=method, et=True,
+                    interpret=True)
+                total = jax.lax.psum(hard.astype(jnp.float32).sum(), axes)
+                return total, nv, t, f
+            return jax.shard_map(
+                inner, mesh=mesh,
+                in_specs=(P(axes, None, None), P(axes, None)),
+                out_specs=(P(), P(axes), P(axes), P(axes)),
+                check_vma=False)(A, cand)
+
+    A_abs = jax.ShapeDtypeStruct((B, T, W), jnp.uint32)
+    cand_abs = jax.ShapeDtypeStruct((B, W), jnp.uint32)
+    ts = P(ALL_AXES, None, None)
+    cs = P(ALL_AXES, None)
+    return Cell(
+        step_fn=step,
+        abstract_args=(A_abs, cand_abs),
+        in_specs=(_sharding_tree(mesh, {"x": ts})["x"] if mesh else None,
+                  _sharding_tree(mesh, {"x": cs})["x"] if mesh else None),
+        out_specs=(_sharding_tree(
+            mesh, {"x": (P(), P(ALL_AXES), P(ALL_AXES), P(ALL_AXES))})["x"]
+            if mesh else None),
+        meta={"n_tiles": B, "T": T, "l": l, "method": method},
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh: Optional[Mesh],
+               reduced: bool = False) -> Cell:
+    cell = spec.cells[shape_name]
+    if cell.skip:
+        raise ValueError(f"cell {spec.name}/{shape_name} is skipped: "
+                         f"{cell.skip}")
+    if spec.family == "lm":
+        if cell.kind == "train":
+            return lm_train_cell(spec, cell, mesh, reduced)
+        if cell.kind == "prefill":
+            return lm_prefill_cell(spec, cell, mesh, reduced)
+        if cell.kind == "decode":
+            return lm_decode_cell(spec, cell, mesh, reduced)
+    if spec.family == "gnn":
+        return gnn_train_cell(spec, cell, mesh, reduced)
+    if spec.family == "recsys":
+        return recsys_cell(spec, cell, mesh, reduced)
+    if spec.family == "clique":
+        return clique_cell(spec, cell, mesh, reduced)
+    raise KeyError((spec.family, cell.kind))

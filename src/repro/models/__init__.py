@@ -1,0 +1,1 @@
+"""Model substrate: LM transformer family, GNNs, equivariant GNN, recsys."""

@@ -1,0 +1,99 @@
+"""Shared model building blocks (pure functional, no flax)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def normal_init(key, shape, stddev, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    """LeCun-normal weight for a (d_in, d_out) matmul."""
+    return normal_init(key, (d_in, d_out), (1.0 / d_in) ** 0.5, dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def act_fn(name: str) -> Callable:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "squared_relu":  # Primer / Nemotron-4
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def init_mlp(key, dims: Sequence[int], dtype=jnp.float32):
+    """Plain MLP params: list of (W, b)."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        params.append({
+            "w": dense_init(k, dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return params
+
+
+def apply_mlp(params, x, act: str = "relu", final_act: bool = False):
+    fn = act_fn(act)
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1 or final_act:
+            x = fn(x)
+    return x
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, z_loss: float = 0.0):
+    """Mean token cross-entropy in f32; labels -100 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    if z_loss:
+        loss = loss + z_loss * ((logz * mask) ** 2).sum() / jnp.maximum(
+            mask.sum(), 1.0)
+    return loss

@@ -1,0 +1,557 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+One flexible implementation:
+  * GQA attention + RoPE, causal, f32 softmax, chunked (flash-style) scores
+    so 32k prefill never materializes (S, S);
+  * optional sliding-window "local" layers (gemma3's 5:1 local:global) --
+    local layers only read a window-sized KV slice (sub-quadratic state);
+  * dense FFN (gated silu/gelu or squared-ReLU) or MoE (shared + routed
+    fine-grained experts, top-k, capacity-based dispatch under shard_map
+    with expert parallelism on the "model" mesh axis);
+  * stacked-layer lax.scan per layer *group* with remat.
+
+Hardware-adaptation note (DESIGN.md section 8): layers are grouped by kind
+(local/global) and scanned group-wise rather than interleaved 5:1; per-step
+FLOPs, memory and collectives are identical, only the (synthetic) numerics
+of layer order differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (act_fn, apply_rope, cross_entropy_loss, dense_init,
+                     normal_init, rms_norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    gated: bool = True
+    moe: Optional[MoEConfig] = None
+    local_window: Optional[int] = None
+    local_per_global: int = 0        # 5 -> gemma-style 5:1; 0 -> all global
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_block: int = 512               # query block for chunked attention
+    analysis_unroll: bool = False    # unroll all scans (cost-analysis mode:
+    #   XLA cost_analysis counts while-loop bodies once; the dry-run lowers
+    #   unrolled probe models to extrapolate true per-step FLOPs/bytes)
+    groups_override: Any = None      # ((kind, count), ...) probe override
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head tables pad the vocab to a multiple of 512 so the
+        vocab axis shards over any mesh (standard table padding; the loss
+        never selects padded ids)."""
+        return -(-self.vocab // 512) * 512
+
+    @property
+    def layer_groups(self) -> List[Tuple[str, int]]:
+        if self.groups_override is not None:
+            return [tuple(g) for g in self.groups_override]
+        if self.local_per_global <= 0 or self.local_window is None:
+            return [("global", self.n_layers)]
+        n_global = self.n_layers // (self.local_per_global + 1)
+        return [("local", self.n_layers - n_global), ("global", n_global)]
+
+    def num_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        if self.moe:
+            e = self.moe
+            ffn = e.n_experts * 3 * d * e.d_expert + d * e.n_experts \
+                + e.n_shared * 3 * d * e.d_expert
+        else:
+            ffn = (3 if self.gated else 2) * d * f
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * v * d + d
+
+    def active_params(self) -> int:
+        """Per-token active parameters (MoE: routed top-k + shared only)."""
+        if not self.moe:
+            return self.num_params()
+        d = self.d_model
+        e = self.moe
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        ffn = (e.top_k + e.n_shared) * 3 * d * e.d_expert + d * e.n_experts
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """How the model maps onto the mesh (None = single device)."""
+    mesh: Optional[Any] = None
+    data_axes: Tuple[str, ...] = ("pod", "data")
+    model_axis: str = "model"
+    layer_specs: Optional[Dict] = None  # per-layer weight gather constraint
+
+
+def _gather_layer(lp: Dict, ctx: "ShardCtx") -> Dict:
+    """FSDP per-layer gather: constrain the sliced layer weights to their
+    compute (model-axis-only) sharding inside the scan body."""
+    if ctx.mesh is None or ctx.layer_specs is None:
+        return lp
+    from jax.sharding import NamedSharding
+    out = dict(lp)
+    for k, spec in ctx.layer_specs.items():
+        if k in out:
+            out[k] = jax.lax.with_sharding_constraint(
+                out[k], NamedSharding(ctx.mesh, spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer_stack(key, cfg: TransformerConfig, count: int):
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 12)
+    p = {
+        "ln1": jnp.zeros((count, d), jnp.float32),
+        "ln2": jnp.zeros((count, d), jnp.float32),
+        "wq": normal_init(ks[0], (count, d, cfg.n_heads, dh), d ** -0.5),
+        "wk": normal_init(ks[1], (count, d, cfg.n_kv_heads, dh), d ** -0.5),
+        "wv": normal_init(ks[2], (count, d, cfg.n_kv_heads, dh), d ** -0.5),
+        "wo": normal_init(ks[3], (count, cfg.n_heads, dh, d),
+                          (cfg.n_heads * dh) ** -0.5),
+    }
+    if cfg.moe:
+        e = cfg.moe
+        fe = e.d_expert
+        p["router"] = normal_init(ks[4], (count, d, e.n_experts), d ** -0.5)
+        p["we1"] = normal_init(ks[5], (count, e.n_experts, d, fe), d ** -0.5)
+        p["we3"] = normal_init(ks[6], (count, e.n_experts, d, fe), d ** -0.5)
+        p["we2"] = normal_init(ks[7], (count, e.n_experts, fe, d), fe ** -0.5)
+        if e.n_shared:
+            fs = e.n_shared * fe
+            p["ws1"] = normal_init(ks[8], (count, d, fs), d ** -0.5)
+            p["ws3"] = normal_init(ks[9], (count, d, fs), d ** -0.5)
+            p["ws2"] = normal_init(ks[10], (count, fs, d), fs ** -0.5)
+    else:
+        f = cfg.d_ff
+        p["w1"] = normal_init(ks[4], (count, d, f), d ** -0.5)
+        p["w2"] = normal_init(ks[5], (count, f, d), f ** -0.5)
+        if cfg.gated:
+            p["w3"] = normal_init(ks[6], (count, d, f), d ** -0.5)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> Dict:
+    keys = jax.random.split(key, 3 + len(cfg.layer_groups))
+    params = {
+        "embed": normal_init(keys[0], (cfg.padded_vocab, cfg.d_model), 0.02),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": normal_init(keys[1], (cfg.d_model, cfg.padded_vocab),
+                            cfg.d_model ** -0.5),
+        "groups": {},
+    }
+    for i, (kind, count) in enumerate(cfg.layer_groups):
+        params["groups"][kind] = _init_layer_stack(keys[3 + i], cfg, count)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, bias):
+    """q: (B,Qb,Hk,G,D); k/v: (B,Skv,Hk,D); bias: (Qb,Skv) additive mask."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores * (q.shape[-1] ** -0.5) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                      q_block: int, unroll_blocks: bool = False):
+    """Flash-style blocked attention; never materializes (S, S).
+
+    q: (B,S,Hq,D), k/v: (B,S,Hk,D). Local layers slice KV to the window
+    around each query block (sub-quadratic compute and memory).
+    """
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    qb = min(q_block, S)
+    nblk = (S + qb - 1) // qb
+    pad = nblk * qb - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = q.reshape(B, nblk, qb, Hk, G, D)
+
+    kv_span = S if window is None else min(S, window + qb)
+
+    def one_block(i, qi):
+        # qi: (B,qb,Hk,G,D)
+        q0 = i * qb
+        if window is None:
+            ks, vs = k, v
+            kpos = jnp.arange(S)
+        else:
+            start = jnp.clip(q0 + qb - kv_span, 0, S - kv_span)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            kpos = start + jnp.arange(kv_span)
+        qpos = q0 + jnp.arange(qb)
+        mask = jnp.ones((qb, kpos.shape[0]), jnp.bool_)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        bias = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+        return _attend_block(qi, ks, vs, bias)
+
+    unroll = nblk if unroll_blocks else 1
+    out = jax.lax.scan(
+        lambda c, args: (c, one_block(*args)), None,
+        (jnp.arange(nblk), qr.swapaxes(0, 1)), unroll=unroll)[1]
+    out = out.swapaxes(0, 1).reshape(B, nblk * qb, Hq, D)
+    return out[:, :S]
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: Optional[int]):
+    """One-token attention against a cache.
+
+    q: (B,1,Hq,D); caches: (B,Sc,Hk,D); lengths: (B,) valid entries.
+    For local layers the cache is a rolling buffer of size window and all
+    entries are valid once full.
+    """
+    B, Sc, Hk, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hk
+    qr = q.reshape(B, 1, Hk, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr, k_cache).astype(jnp.float32)
+    scores = scores * (D ** -0.5)
+    pos = jnp.arange(Sc)[None, :]
+    valid = pos < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(B, 1, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+def dense_ffn(x, p, cfg: TransformerConfig):
+    a = act_fn(cfg.act)
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.gated:
+        h = a(h) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = a(h)
+    return h @ p["w2"].astype(x.dtype)
+
+
+def _moe_dispatch_local(x2d, p, cfg: TransformerConfig, e_loc: int, e0,
+                        psum_axis: Optional[str]):
+    """Grouped-GEMM MoE over the local expert shard.
+
+    x2d: (T, d) local tokens (replicated over the model axis); expert
+    weights hold e_loc experts starting at global id e0.
+    """
+    moe = cfg.moe
+    T, d = x2d.shape
+    E, K = moe.n_experts, moe.top_k
+    a = act_fn(cfg.act)
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                    # (T, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    flat_e = topi.reshape(-1)                                # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within expert group
+    starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = jnp.arange(T * K) - starts[se]
+    C = int(max(1, -(-T * K * moe.capacity_factor // E)))
+    local = (se >= e0) & (se < e0 + e_loc)
+    keep = (pos < C) & local
+    le = jnp.where(keep, se - e0, 0)
+    lp = jnp.where(keep, pos, C - 1)
+    xt = x2d[st] * keep[:, None].astype(x2d.dtype)
+    buf = jnp.zeros((e_loc, C, d), x2d.dtype)
+    buf = buf.at[le, lp].add(xt)                             # (e_loc, C, d)
+    # weights are already the local expert shard (shard_map) or full (E=e_loc)
+    w1 = p["we1"].astype(x2d.dtype)
+    w3 = p["we3"].astype(x2d.dtype)
+    w2 = p["we2"].astype(x2d.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    h = a(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    y = jnp.einsum("ecf,efd->ecd", h, w2)                    # (e_loc, C, d)
+    yt = y[le, lp] * (keep[:, None] * sw[:, None]).astype(x2d.dtype)
+    out = jax.ops.segment_sum(yt, st, num_segments=T)
+    if psum_axis is not None:
+        out = jax.lax.psum(out, psum_axis)
+    return out
+
+
+def moe_ffn(x, p, cfg: TransformerConfig, ctx: ShardCtx):
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    moe = cfg.moe
+    if ctx.mesh is None:
+        out = _moe_dispatch_local(x2d, p, cfg, moe.n_experts, 0, None)
+    else:
+        from jax.sharding import PartitionSpec
+        ma = ctx.model_axis
+        n_model = ctx.mesh.shape[ma]
+        e_loc = moe.n_experts // n_model
+        ew = PartitionSpec(ma)    # expert-major weights sharded over model
+        rp = PartitionSpec()      # replicated
+
+        def inner(x2d_loc, router, we1, we3, we2):
+            pp = {"router": router, "we1": we1, "we3": we3, "we2": we2}
+            e0 = jax.lax.axis_index(ma) * e_loc
+            return _moe_dispatch_local(x2d_loc, pp, cfg, e_loc, e0, ma)
+
+        out = jax.shard_map(
+            inner, mesh=ctx.mesh,
+            in_specs=(PartitionSpec(ctx.data_axes), rp, ew, ew, ew),
+            out_specs=PartitionSpec(ctx.data_axes),
+            check_vma=False,
+        )(x2d, p["router"], p["we1"], p["we3"], p["we2"])
+    if moe.n_shared:
+        a = act_fn(cfg.act)
+        h = a(x2d @ p["ws1"].astype(x.dtype)) * (x2d @ p["ws3"].astype(x.dtype))
+        out = out + h @ p["ws2"].astype(x.dtype)
+    return out.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# layers / forward
+# ---------------------------------------------------------------------------
+
+def _layer(x, p, cfg: TransformerConfig, ctx: ShardCtx, kind: str):
+    B, S, d = x.shape
+    p = _gather_layer(p, ctx)
+    h = rms_norm(x, p["ln1"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    pos = jnp.arange(S)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    window = cfg.local_window if kind == "local" else None
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          q_block=cfg.q_block,
+                          unroll_blocks=cfg.analysis_unroll)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    h = rms_norm(x, p["ln2"])
+    if cfg.moe:
+        x = x + moe_ffn(h, p, cfg, ctx)
+    else:
+        x = x + dense_ffn(h, p, cfg)
+    return x
+
+
+def forward_hidden(params, tokens, cfg: TransformerConfig,
+                   ctx: ShardCtx = ShardCtx()):
+    """tokens (B, S) -> final hidden states (B, S, d)."""
+    x = params["embed"][tokens].astype(cfg.dtype)
+    for kind, count in cfg.layer_groups:
+        stack = params["groups"][kind]
+
+        def body(carry, lp, _kind=kind):
+            fn = functools.partial(_layer, cfg=cfg, ctx=ctx, kind=_kind)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            return fn(carry, lp), None
+
+        x, _ = jax.lax.scan(body, x, stack,
+                            unroll=count if cfg.analysis_unroll else 1)
+    return rms_norm(x, params["final_ln"])
+
+
+def forward(params, tokens, cfg: TransformerConfig, ctx: ShardCtx = ShardCtx()):
+    """tokens (B, S) -> logits (B, S, vocab) (small-vocab / test use)."""
+    x = forward_hidden(params, tokens, cfg, ctx)
+    return jnp.einsum("bsd,dv->bsv", x,
+                      params["head"].astype(x.dtype)).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, ctx: ShardCtx = ShardCtx(),
+            loss_chunk: int = 1024):
+    """Causal LM loss with sequence-chunked head+CE.
+
+    The (B, S, vocab) logits tensor is never materialized: the head matmul
+    and log-softmax run per sequence chunk under a rematerialized scan
+    (crucial for the 256k-vocab archs at 4k train / 32k prefill shapes).
+    """
+    x = forward_hidden(params, batch["tokens"], cfg, ctx)
+    labels = batch["labels"]
+    B, S, d = x.shape
+    ck = min(loss_chunk, S)
+    nchunk = S // ck if S % ck == 0 else -(-S // ck)
+    pad = nchunk * ck - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    xc = x.reshape(B, nchunk, ck, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nchunk, ck).swapaxes(0, 1)
+    head = params["head"]
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        nll_sum, n_tok = carry
+        xc_i, lb_i = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc_i,
+                            head.astype(xc_i.dtype)).astype(jnp.float32)
+        mask = (lb_i >= 0).astype(jnp.float32)
+        lbl = jnp.maximum(lb_i, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        nll = ((logz - gold) * mask).sum()
+        return (nll_sum + nll, n_tok + mask.sum()), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        chunk_body, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc),
+        unroll=nchunk if cfg.analysis_unroll else 1)
+    return nll_sum / jnp.maximum(n_tok, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-group KV caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Per-group KV caches; local groups keep only a window-sized buffer."""
+    cache = {}
+    for kind, count in cfg.layer_groups:
+        S = cfg.local_window if kind == "local" else max_len
+        S = min(S, max_len)
+        shape = (count, batch, S, cfg.n_kv_heads, cfg.d_head)
+        cache[kind] = {"k": jnp.zeros(shape, cfg.dtype),
+                       "v": jnp.zeros(shape, cfg.dtype)}
+    return cache
+
+
+def decode_step(params, cache, tokens, lengths, cfg: TransformerConfig,
+                ctx: ShardCtx = ShardCtx()):
+    """One decode step. tokens: (B, 1) new token; lengths: (B,) cache fill.
+
+    Returns (logits (B, vocab), updated cache).
+    """
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)     # (B,1,d)
+    new_cache = {}
+    for kind, count in cfg.layer_groups:
+        stack = params["groups"][kind]
+        kc, vc = cache[kind]["k"], cache[kind]["v"]
+        Sc = kc.shape[2]
+        window = cfg.local_window if kind == "local" else None
+
+        def body(carry, layer_in, _kind=kind, _Sc=Sc, _window=window):
+            x = carry
+            lp, kci, vci = layer_in
+            lp = _gather_layer(lp, ctx)
+            h = rms_norm(x, lp["ln1"])
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(h.dtype))
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(h.dtype))
+            q = apply_rope(q, lengths[:, None], cfg.rope_theta)
+            k = apply_rope(k, lengths[:, None], cfg.rope_theta)
+            slot = lengths if _window is None else lengths % _Sc
+            bidx = jnp.arange(B)
+            kci = kci.at[bidx, slot].set(k[:, 0])
+            vci = vci.at[bidx, slot].set(v[:, 0])
+            eff_len = jnp.minimum(lengths + 1, _Sc)
+            o = decode_attention(q, kci, vci, eff_len, window=_window)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+            h = rms_norm(x, lp["ln2"])
+            if cfg.moe:
+                x = x + moe_ffn(h, lp, cfg, ctx)
+            else:
+                x = x + dense_ffn(h, lp, cfg)
+            return x, (kci, vci)
+
+        x, (kc_new, vc_new) = jax.lax.scan(
+            body, x, (stack, kc, vc),
+            unroll=count if cfg.analysis_unroll else 1)
+        new_cache[kind] = {"k": kc_new, "v": vc_new}
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    return logits[:, 0].astype(jnp.float32), new_cache
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int,
+            ctx: ShardCtx = ShardCtx()):
+    """Full-sequence forward that also fills the KV cache.
+
+    Returns (logits (B, S, vocab), cache).  The cache write replays the
+    k/v projections (cheap relative to attention itself).
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    for kind, count in cfg.layer_groups:
+        stack = params["groups"][kind]
+        Sc = cache[kind]["k"].shape[2]
+
+        def kv_of_layer(carry, lp, _kind=kind):
+            x = carry
+            lp = _gather_layer(lp, ctx)
+            h = rms_norm(x, lp["ln1"])
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(h.dtype))
+            k = apply_rope(k, jnp.arange(S)[None, :], cfg.rope_theta)
+            if ctx.mesh is not None:
+                # keep the stacked per-layer KV sharded while it flows
+                # through the scan (otherwise the (L,B,S,H,D) stack
+                # materializes replicated before the cache write)
+                from jax.sharding import NamedSharding, PartitionSpec
+                kv_ax = "model" if cfg.n_kv_heads % int(
+                    ctx.mesh.shape[ctx.model_axis]) == 0 else None
+                ns = NamedSharding(ctx.mesh, PartitionSpec(
+                    ctx.data_axes, None if kv_ax else "model", kv_ax, None))
+                k = jax.lax.with_sharding_constraint(k, ns)
+                v = jax.lax.with_sharding_constraint(v, ns)
+            x = _layer(x, lp, cfg, ctx, _kind)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(
+            kv_of_layer, x, stack,
+            unroll=count if cfg.analysis_unroll else 1)
+        take = min(Sc, S)
+        # rolling-buffer contract: token position p lives in slot p % Sc
+        # (decode evicts position p-Sc when writing p; prefill must agree)
+        positions = np.arange(S - take, S)
+        slots = positions % Sc
+        cache[kind]["k"] = cache[kind]["k"].at[:, :, slots].set(
+            ks[:, :, S - take:])
+        cache[kind]["v"] = cache[kind]["v"].at[:, :, slots].set(
+            vs[:, :, S - take:])
+    x = rms_norm(x, params["final_ln"])
+    last = jnp.einsum("bd,dv->bv", x[:, -1],
+                      params["head"].astype(x.dtype)).astype(jnp.float32)
+    return last, cache

@@ -1,0 +1,10 @@
+"""Optimizers, schedules, gradient clipping and gradient compression.
+
+Self-contained (no optax): AdamW over arbitrary pytrees with optimizer
+state sharded identically to the parameters (first-moment/second-moment
+trees inherit the param PartitionSpecs in the launcher).
+"""
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm, clip_by_global_norm
+from .schedule import cosine_schedule, linear_schedule
+from .compress import (int8_compress, int8_decompress, compressed_allreduce,
+                       compressed_psum_tree)

@@ -1,0 +1,73 @@
+"""AdamW with decoupled weight decay and global-norm clipping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: Optional[Callable] = None  # step -> lr multiplier
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 wd_mask=None):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    lr = cfg.lr * (cfg.schedule(count) if cfg.schedule else 1.0)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v
+                      + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state["nu"], grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    if wd_mask is None:
+        wd_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    def upd(p, m, v, wd):
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * jnp.where(wd, p, 0.0
+                                                       ).astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu, wd_mask)
+    return new_params, {"mu": mu, "nu": nu, "count": count}, {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (return multiplier for AdamWConfig.schedule)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def linear_schedule(warmup: int, total: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        dec = jnp.clip(1.0 - (step - warmup) / jnp.maximum(total - warmup, 1),
+                       0.0, 1.0)
+        return jnp.where(step < warmup, warm, dec)
+    return fn

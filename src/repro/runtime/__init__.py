@@ -1,0 +1,3 @@
+"""Training / serving runtime: fault-tolerant loops + clique scheduler."""
+from .train_loop import TrainLoop, TrainLoopConfig
+from .clique_scheduler import balanced_bins, schedule_tiles

@@ -1,0 +1,62 @@
+"""Straggler-aware scheduling of clique tiles onto devices.
+
+The truss-based edge ordering is also a *load balancer*: every tile's cost
+is bounded by tau, and the tile's work is predictable from its size before
+dispatch (cost model below).  We over-decompose into ``overdecompose x
+n_devices`` bins, assign greedily by Longest-Processing-Time (LPT), and
+lay bins out round-robin so a slow device can shed whole bins on requeue.
+
+Cost model (per tile, DFS kernel): branches ~ nedges * (s/4)^(l-3) for
+l >= 3 capped crudely; calibrated against measured host-engine branch
+counts in benchmarks/bench_parallel (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def tile_cost(s: int, nedges: int, l: int) -> float:
+    if l <= 1:
+        return 1.0 + s
+    if l == 2:
+        return 1.0 + nedges
+    return 1.0 + nedges * max(1.0, s / 4.0) ** (l - 3 if l > 3 else 0.5)
+
+
+def balanced_bins(costs: Sequence[float], n_bins: int
+                  ) -> Tuple[List[List[int]], np.ndarray]:
+    """LPT greedy: returns (bin -> tile indices, per-bin total cost)."""
+    costs = np.asarray(costs, dtype=np.float64)
+    order = np.argsort(-costs)
+    loads = np.zeros(n_bins)
+    bins: List[List[int]] = [[] for _ in range(n_bins)]
+    for i in order:
+        b = int(np.argmin(loads))
+        bins[b].append(int(i))
+        loads[b] += costs[i]
+    return bins, loads
+
+
+def schedule_tiles(tiles, l: int, n_devices: int, overdecompose: int = 16):
+    """tiles: list with .s and .nedges. Returns (device -> tile ids, stats).
+
+    Over-decomposition bounds the requeue unit for straggler mitigation
+    while LPT keeps static balance tight (max/mean load reported).
+    """
+    costs = [tile_cost(t.s, t.nedges, l) for t in tiles]
+    n_bins = max(1, min(len(tiles), n_devices * overdecompose))
+    bins, loads = balanced_bins(costs, n_bins)
+    device_bins: List[List[int]] = [[] for _ in range(n_devices)]
+    order = np.argsort(-loads)
+    dev_loads = np.zeros(n_devices)
+    for b in order:
+        d = int(np.argmin(dev_loads))
+        device_bins[d].extend(bins[b])
+        dev_loads[d] += loads[b]
+    stats = {
+        "max_over_mean": float(dev_loads.max() / max(dev_loads.mean(), 1e-9)),
+        "device_loads": dev_loads,
+    }
+    return device_bins, stats

@@ -1,0 +1,4 @@
+"""Logical-axis sharding rules -> PartitionSpecs / NamedShardings."""
+from .rules import (LogicalRules, LM_RULES, GNN_RULES, RECSYS_RULES,
+                    CLIQUE_RULES, spec_for, tree_shardings,
+                    transformer_param_specs, batch_specs)

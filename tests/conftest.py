@@ -1,0 +1,26 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the 512-device override is
+# confined to launch/dryrun.py per the assignment)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import graph as graph_mod
+
+
+def random_graph(rng, n_lo=5, n_hi=18, p_lo=0.15, p_hi=0.8):
+    n = int(rng.integers(n_lo, n_hi))
+    p = float(rng.uniform(p_lo, p_hi))
+    mask = rng.random((n, n)) < p
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if mask[i, j]]
+    return graph_mod.from_edges(n, edges)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,70 @@
+"""EBBkC correctness: all orderings x ET settings vs brute force."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ebbkc, oracle, vbbkc
+
+from conftest import random_graph
+
+
+@given(st.integers(0, 10_000), st.integers(3, 6))
+@settings(max_examples=40, deadline=None)
+def test_counts_match_bruteforce(seed, k):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    ref = oracle.count_kcliques_brute(g, k)
+    for order in ("hybrid", "truss", "color"):
+        for et in (0, 2, 3):
+            r = ebbkc.count(g, k, order=order, et_t=et)
+            assert r.count == ref, (order, et, r.count, ref)
+
+
+@given(st.integers(0, 10_000), st.integers(3, 5))
+@settings(max_examples=25, deadline=None)
+def test_vbbkc_matches(seed, k):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    ref = oracle.count_kcliques_brute(g, k)
+    for variant in ("degen", "ddegcol", "ddegcol+"):
+        assert vbbkc.count(g, k, variant=variant).count == ref
+
+
+@given(st.integers(0, 10_000), st.integers(3, 5))
+@settings(max_examples=20, deadline=None)
+def test_listing_exact(seed, k):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    got, _ = ebbkc.list_cliques(g, k)
+    exp = sorted(oracle.list_kcliques_brute(g, k))
+    assert sorted(map(tuple, got.tolist())) == exp
+    # every listed clique is sorted and unique
+    assert len({tuple(r) for r in got.tolist()}) == len(got)
+
+
+def test_rule2_prunes_but_preserves_count():
+    rng = np.random.default_rng(3)
+    g = random_graph(rng, n_lo=14, n_hi=18, p_lo=0.4, p_hi=0.6)
+    k = 5
+    with_r2 = ebbkc.count(g, k, order="hybrid", et_t=0, use_rule2=True)
+    without = ebbkc.count(g, k, order="hybrid", et_t=0, use_rule2=False)
+    assert with_r2.count == without.count
+    assert with_r2.stats.pruned_color >= without.stats.pruned_color
+
+
+def test_et_reduces_branches():
+    """ET must cut branch count on dense graphs without changing results."""
+    rng = np.random.default_rng(5)
+    g = random_graph(rng, n_lo=16, n_hi=20, p_lo=0.7, p_hi=0.9)
+    k = 6
+    no_et = ebbkc.count(g, k, order="hybrid", et_t=0)
+    et = ebbkc.count(g, k, order="hybrid", et_t=3)
+    assert no_et.count == et.count
+    assert et.stats.branches <= no_et.stats.branches
+    assert et.stats.et_hits > 0
+
+
+def test_k_edge_and_vertex_cases():
+    rng = np.random.default_rng(9)
+    g = random_graph(rng)
+    assert ebbkc.count(g, 1).count == g.n
+    assert ebbkc.count(g, 2).count == g.m

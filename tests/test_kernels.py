@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G, oracle
+from repro.core.bitops import pack_mask, pack_rows
+from repro.kernels import ops, ref
+from repro.kernels.common import gt_masks_np, pascal_table
+
+
+def make_tiles(rng, B, T, p_lo=0.2, p_hi=0.9):
+    As, cands, gs = [], [], []
+    for _ in range(B):
+        s = int(rng.integers(2, T + 1))
+        p = float(rng.uniform(p_lo, p_hi))
+        mask = rng.random((s, s)) < p
+        edges = [(i, j) for i in range(s) for j in range(i + 1, s)
+                 if mask[i, j]]
+        g = G.from_edges(s, edges)
+        rows = [0] * s
+        for u, v in edges:
+            rows[u] |= 1 << v
+            rows[v] |= 1 << u
+        As.append(pack_rows(rows, T))
+        cands.append(pack_mask((1 << s) - 1, T))
+        gs.append(g)
+    return jnp.asarray(np.stack(As)), jnp.asarray(np.stack(cands)), gs
+
+
+@pytest.mark.parametrize("T", [32, 64, 128])
+@pytest.mark.parametrize("l", [1, 2, 3, 4, 5])
+def test_dfs_kernel_shape_sweep(T, l):
+    rng = np.random.default_rng(T * 100 + l)
+    A, cand, gs = make_tiles(rng, 6, min(T, 24))
+    # re-pack at width T
+    A = jnp.pad(A, ((0, 0), (0, T - A.shape[1]), (0, T // 32 - A.shape[2])))
+    cand = jnp.pad(cand, ((0, 0), (0, T // 32 - cand.shape[1])))
+    method = "dfs" if l >= 3 else "ref"
+    got = np.asarray(ops.count_tiles(A, cand, l, method=method,
+                                     interpret=True))
+    exp = np.asarray([oracle.count_kcliques_brute(g, l) for g in gs],
+                     dtype=np.uint32)
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("T", [32, 64])
+def test_mxu_triangle_kernel(T):
+    rng = np.random.default_rng(T)
+    A, cand, gs = make_tiles(rng, 9, T)
+    got = np.asarray(ops.triangles(A, cand, interpret=True))
+    exp = np.asarray([oracle.count_kcliques_brute(g, 3) for g in gs],
+                     dtype=np.uint32)
+    np.testing.assert_array_equal(got, exp)
+    # and against the einsum oracle
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.triangle_count_tiles_ref(A, cand)))
+
+
+@pytest.mark.parametrize("T", [32, 64])
+def test_intersect_kernel(T):
+    rng = np.random.default_rng(T + 1)
+    A, cand, gs = make_tiles(rng, 8, T)
+    pairs = []
+    for g in gs:
+        pairs.append(g.edges[0].astype(np.int32) if g.m
+                     else np.array([0, 1], np.int32))
+    pairs = jnp.asarray(np.stack(pairs))
+    c1, n1 = ops.edge_candidates(A, pairs, interpret=True)
+    c2, n2 = ref.edge_candidates_ref(A, pairs)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+
+
+def test_dfs_vs_expansion_ref_cross_check():
+    rng = np.random.default_rng(99)
+    A, cand, _ = make_tiles(rng, 5, 32)
+    for l in (3, 4, 5, 6):
+        a = np.asarray(ops.count_tiles(A, cand, l, method="dfs",
+                                       interpret=True))
+        b = np.asarray(ref.clique_count_tiles_ref(A, cand, l))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_gt_masks():
+    gt = gt_masks_np(64)
+    assert gt.shape == (64, 2)
+    for v in (0, 31, 32, 63):
+        bits = np.unpackbits(gt[v].view(np.uint8), bitorder="little")
+        expected = np.zeros(64, np.uint8)
+        expected[v + 1:] = 1
+        np.testing.assert_array_equal(bits, expected)
+
+
+def test_pascal_table():
+    from math import comb
+    t = pascal_table(20)
+    for n in range(21):
+        for r in range(n + 1):
+            assert t[n, r] == comb(n, r)

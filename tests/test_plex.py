@@ -1,0 +1,92 @@
+"""Early-termination (Section 5): closed forms + kC2Plex/kCtPlex listings."""
+from itertools import combinations
+from math import comb
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plex
+from repro.core.bitops import popcount
+
+
+def make_2plex(f, p):
+    """f universal vertices + p non-adjacent pairs -> rows."""
+    n = f + 2 * p
+    full = (1 << n) - 1
+    rows = []
+    for v in range(n):
+        r = full & ~(1 << v)
+        if v >= f:  # paired vertex: remove its partner
+            j = v - f
+            partner = f + (j ^ 1)
+            r &= ~(1 << partner)
+        rows.append(r)
+    return rows, full
+
+
+@given(st.integers(0, 5), st.integers(0, 4), st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_2plex_closed_form(f, p, l):
+    rows, cand = make_2plex(f, p)
+    if f + 2 * p == 0:
+        return
+    got = plex.count_in_2plex(rows, cand, l)
+    # brute force
+    n = f + 2 * p
+    exp = 0
+    for c in combinations(range(n), l):
+        if all((rows[a] >> b) & 1 for a, b in combinations(c, 2)):
+            exp += 1
+    assert got == exp
+    assert got == plex.count_2plex(f, p, l)
+
+
+def test_2plex_complete_graph():
+    # K_n is a 1-plex: count(l) = C(n, l)
+    for n in (3, 5, 8):
+        rows, cand = make_2plex(n, 0)
+        for l in range(0, n + 1):
+            assert plex.count_in_2plex(rows, cand, l) == comb(n, l)
+
+
+@given(st.integers(0, 4), st.integers(0, 3), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_list_2plex_matches_count(f, p, l):
+    rows, cand = make_2plex(f, p)
+    if f + 2 * p == 0:
+        return
+    got = sorted(tuple(sorted(t)) for t in plex.list_2plex(rows, cand, l))
+    assert len(got) == len(set(got))          # unique
+    assert len(got) == plex.count_2plex(f, p, l)
+    for t in got:                             # each is a clique
+        for a, b in combinations(t, 2):
+            assert (rows[a] >> b) & 1
+
+
+@given(st.integers(0, 2000), st.integers(2, 5))
+@settings(max_examples=40, deadline=None)
+def test_list_tplex_on_dense_random(seed, l):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 10))
+    full = (1 << n) - 1
+    rows = [full & ~(1 << v) for v in range(n)]
+    # remove a few random edges -> t-plex with small t
+    for _ in range(int(rng.integers(0, n))):
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            rows[a] &= ~(1 << int(b))
+            rows[b] &= ~(1 << int(a))
+    got = sorted(tuple(sorted(t)) for t in plex.list_tplex(rows, full, l))
+    exp = []
+    for c in combinations(range(n), l):
+        if all((rows[a] >> b) & 1 for a, b in combinations(c, 2)):
+            exp.append(c)
+    assert got == sorted(exp)
+
+
+def test_plexity_detection():
+    rows, cand = make_2plex(3, 2)
+    nv, t = plex.plexity(rows, cand)
+    assert nv == 7 and t == 2
+    F, rest = plex.split_universal(rows, cand)
+    assert popcount(F) == 3 and popcount(rest) == 4

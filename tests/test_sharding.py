@@ -1,0 +1,43 @@
+"""Sharding rules: spec construction, divisibility fallbacks, mesh filter."""
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.sharding.rules import (LM_RULES, spec_for,
+                                  transformer_param_specs,
+                                  transformer_layer_specs)
+
+
+def test_spec_for_basic():
+    s = spec_for(LM_RULES, ("batch", "seq", "heads"))
+    assert s == P(("pod", "data"), None, "model")
+
+
+def test_kv_replication_fallback():
+    cfg = configs.get("dbrx-132b").full          # kv=8 < TP=16
+    specs = transformer_param_specs(cfg, model_size=16)
+    assert specs["groups"]["global"]["wk"] == P(None, "data", None, None)
+    assert specs["groups"]["global"]["wq"][2] == "model"
+    cfg2 = configs.get("deepseek-moe-16b").full  # kv=16 == TP
+    specs2 = transformer_param_specs(cfg2, model_size=16)
+    assert specs2["groups"]["global"]["wk"][2] == "model"
+
+
+def test_layer_specs_are_model_only():
+    cfg = configs.get("gemma3-27b").full
+    ls = transformer_layer_specs(cfg, model_size=16)
+    for k, s in ls.items():
+        for part in s:
+            assert part in (None, "model"), (k, s)
+
+
+def test_vocab_padding():
+    cfg = configs.get("granite-3-8b").full
+    assert cfg.vocab == 49155
+    assert cfg.padded_vocab % 512 == 0
+    assert cfg.padded_vocab >= cfg.vocab
+
+
+def test_moe_expert_divisibility():
+    for name in ("deepseek-moe-16b", "dbrx-132b"):
+        cfg = configs.get(name).full
+        assert cfg.moe.n_experts % 16 == 0, name  # model axis = 16

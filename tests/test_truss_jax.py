@@ -1,0 +1,30 @@
+"""On-device truss decomposition matches the host peeler exactly."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.truss import truss_decomposition
+from repro.core.truss_jax import truss_decomposition_jax
+
+from conftest import random_graph
+
+
+@given(st.integers(0, 2000))
+@settings(max_examples=15, deadline=None)
+def test_jax_truss_matches_host(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_lo=5, n_hi=24)
+    if g.m == 0:
+        return
+    td = truss_decomposition(g)
+    truss_j, tau_j = truss_decomposition_jax(g)
+    assert tau_j == td.tau
+    np.testing.assert_array_equal(truss_j, td.trussness)
+
+
+def test_jax_truss_medium_graph():
+    from repro.data import powerlaw_graph
+    g = powerlaw_graph(400, 8, seed=2)
+    td = truss_decomposition(g)
+    truss_j, tau_j = truss_decomposition_jax(g)
+    assert tau_j == td.tau
+    np.testing.assert_array_equal(truss_j, td.trussness)
