@@ -153,6 +153,7 @@ def bench_et_t():
 # ---------------------------------------------------------------------------
 
 def bench_parallel():
+    from repro.core import pipeline
     from repro.core import tiles as tiles_mod
     from repro.core.engine_np import Stats, count_rec_C, count_rec_V
     from repro.runtime.clique_scheduler import balanced_bins
@@ -161,7 +162,7 @@ def bench_parallel():
     k = 6
     # true per-unit work = measured branch count per top-level branch
     ep_costs = []
-    for tile in tiles_mod.edge_tiles(g, k, mode="hybrid"):
+    for tile in pipeline.iter_tiles(g, k, mode="hybrid"):
         st = Stats()
         count_rec_C(tile.rows, (1 << tile.s) - 1, k - 2, st,
                     colors=tile.colors, et_t=3)
@@ -185,6 +186,60 @@ def bench_parallel():
                  f"units={len(costs)};roundrobin_imbalance={rr:.3f};"
                  f"lpt_imbalance={lpt:.3f};"
                  f"parallel_efficiency={1 / lpt:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Pipeline front-end: reference vs vectorized extraction + stage breakdown
+# ---------------------------------------------------------------------------
+
+def bench_pipeline_stages():
+    """Front-end comparison + per-stage timing on rmat12/k=5.
+
+    "reference" is the pre-pipeline front-end (pure-Python extractor in
+    ``core.tiles`` + per-bit packer), kept as the parity oracle;
+    "vectorized" is ``core.pipeline``.  The e2e rows break the accelerator
+    engine's wall-clock into extract / pack / device / combine stages and
+    derive the end-to-end speedup of swapping front-ends under the same
+    device compute.
+    """
+    from repro.core import engine_jax, pipeline
+    from repro.core import tiles as tiles_mod
+
+    g = graph_suite()["rmat12"]
+    k = 5
+
+    def reference_frontend():
+        binned = {}
+        for t in tiles_mod.edge_tiles(g, k, mode="hybrid"):
+            T = next(b for b in pipeline.BINS if t.s <= b)
+            binned.setdefault(T, []).append(t)
+        return {T: engine_jax.pack_tiles(ts, T)
+                for T, ts in sorted(binned.items())}
+
+    ref, t_ref = timed(reference_frontend)
+    batches, t_vec = timed(
+        lambda: [b for b in pipeline.stream_batches(g, k, order="hybrid")])
+    n_ref = sum(p.A.shape[0] for p in ref.values())
+    n_vec = sum(b.B for b in batches if isinstance(b, pipeline.TileBatch))
+    assert n_ref == n_vec, (n_ref, n_vec)
+    emit("pipeline/rmat12/k5/frontend_reference", t_ref, f"tiles={n_ref}")
+    emit("pipeline/rmat12/k5/frontend_vectorized", t_vec,
+         f"tiles={n_vec};extract_speedup={t_ref / max(t_vec, 1e-9):.2f}")
+
+    stage = {}
+    r, t_e2e = timed(engine_jax.count, g, k, interpret=True,
+                     stage_times=stage)
+    breakdown = ";".join(
+        f"{s}={stage.get(s, 0.0) * 1e6:.0f}us"
+        for s in ("extract", "pack", "device", "combine"))
+    emit(f"pipeline/rmat12/k{k}/e2e", t_e2e,
+         f"count={r.count};tiles={r.tiles};{breakdown}")
+    # seed-equivalent e2e: same device/combine stages, reference front-end
+    t_front = stage.get("extract", 0.0) + stage.get("pack", 0.0)
+    t_seed = t_e2e - t_front + t_ref
+    emit(f"pipeline/rmat12/k{k}/e2e_seed_equiv", t_seed,
+         f"frontend={t_ref * 1e6:.0f}us;"
+         f"e2e_speedup={t_seed / max(t_e2e, 1e-9):.2f}")
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +310,8 @@ def bench_device_engine():
 ALL = [
     bench_dataset_stats, bench_kclique_runtime, bench_ablation,
     bench_ordering_time, bench_edge_orderings, bench_rule2, bench_et_t,
-    bench_parallel, bench_space, bench_scalability, bench_device_engine,
+    bench_parallel, bench_pipeline_stages, bench_space, bench_scalability,
+    bench_device_engine,
 ]
 
 

@@ -1,10 +1,13 @@
 """EBBkC public API: edge-oriented branch-and-bound k-clique listing.
 
 ``count`` / ``list_cliques`` run the paper's Algorithms 2-7 over the tile
-dataflow of :mod:`repro.core.tiles`.  ``backend="host"`` executes the
-paper-faithful python-int bitset recursion; ``backend="jax"`` packs tiles
-into fixed-shape uint32 batches and counts on the accelerator engine
-(:mod:`repro.core.engine_jax`), which is what the multi-pod deployment uses.
+dataflow of :mod:`repro.core.pipeline` (vectorized extraction; the Python
+reference extractor lives in :mod:`repro.core.tiles`).  ``backend="host"``
+executes the paper-faithful python-int bitset recursion; ``backend="jax"``
+streams capacity-batched fixed-shape uint32 batches through the accelerator
+engine (:mod:`repro.core.engine_jax`), which is what the multi-pod
+deployment uses.  Pass a prebuilt :class:`~repro.core.pipeline.PipelinePlan`
+as ``plan`` to amortize preprocessing across queries on one graph.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import numpy as np
 from .engine_np import (Stats, count_rec_C, count_rec_T, count_rec_V,
                         list_rec_C)
 from .graph import Graph
-from . import tiles as tiles_mod
+from . import pipeline
 
 
 @dataclasses.dataclass
@@ -29,7 +32,8 @@ class Result:
 
 def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
           use_rule2: bool = True, backend: str = "host",
-          engine_kwargs: Optional[dict] = None) -> Result:
+          engine_kwargs: Optional[dict] = None,
+          plan: Optional[pipeline.PipelinePlan] = None) -> Result:
     """Count k-cliques with edge-oriented branching (EBBkC-T/C/H)."""
     if k < 1:
         raise ValueError("k >= 1 required")
@@ -41,13 +45,14 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     if backend == "jax":
         from . import engine_jax
         return engine_jax.count(g, k, order=order, et_t=et_t,
-                                use_rule2=use_rule2,
+                                use_rule2=use_rule2, plan=plan,
                                 **(engine_kwargs or {}))
     total = 0
     ntiles = 0
     max_tile = 0
     l = k - 2
-    for tile in tiles_mod.edge_tiles(g, k, mode=order, use_rule2=use_rule2):
+    for tile in pipeline.iter_tiles(plan or g, k, mode=order,
+                                    use_rule2=use_rule2):
         ntiles += 1
         max_tile = max(max_tile, tile.s)
         cand = (1 << tile.s) - 1
@@ -62,24 +67,31 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
 
 
 def list_cliques(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
-                 max_out: Optional[int] = None) -> Tuple[np.ndarray, Stats]:
-    """List k-cliques; returns (count x k) array of global vertex ids."""
+                 max_out: Optional[int] = None,
+                 plan: Optional[pipeline.PipelinePlan] = None
+                 ) -> Tuple[np.ndarray, Stats]:
+    """List k-cliques; returns (count x k) array of global vertex ids.
+
+    With ``max_out`` set, exactly ``min(max_out, total)`` cliques are
+    returned (a whole tile's results are collected before the bound check,
+    then truncated).
+    """
     stats = Stats()
     if k == 1:
         return np.arange(g.n, dtype=np.int64)[:, None], stats
     if k == 2:
         return g.edges.copy(), stats
     out_all: List[Tuple[int, ...]] = []
-    for tile in tiles_mod.edge_tiles(g, k, mode=order):
+    for tile in pipeline.iter_tiles(plan or g, k, mode=order):
         cand = (1 << tile.s) - 1
         local: List[Tuple[int, ...]] = []
         list_rec_C(tile.rows, cand, k - 2, (), local, et_t=et_t)
         for tup in local:
             out_all.append(tile.anchor + tuple(int(tile.verts[i])
                                                for i in tup))
-            if max_out is not None and len(out_all) >= max_out:
-                arr = np.asarray(out_all, dtype=np.int64)
-                return np.sort(arr, axis=1), stats
+        if max_out is not None and len(out_all) >= max_out:
+            arr = np.asarray(out_all[:max_out], dtype=np.int64).reshape(-1, k)
+            return np.sort(arr, axis=1), stats
     if not out_all:
         return np.zeros((0, k), dtype=np.int64), stats
     arr = np.asarray(out_all, dtype=np.int64)

@@ -1,11 +1,14 @@
 """Accelerator counting engine: tiles -> packed bitset batches -> kernels.
 
 Pipeline (the TPU-native EBBkC of DESIGN.md section 2):
-  1. host tile extraction (:mod:`repro.core.tiles`) under the chosen ordering;
-  2. size binning: tiles are bucketed into power-of-two tile sizes
-     T in {32, 64, 128, 256} so each batch is a fixed-shape (B, T, T/32)
-     uint32 array (lockstep SPMD wants tight bins -- the truss ordering makes
-     them tight, Lemma 4.1);
+  1. vectorized tile extraction + capacity-batched packing
+     (:mod:`repro.core.pipeline`) under the chosen ordering -- fixed-shape
+     (B, T, T/32) uint32 batches stream off the host with bounded memory
+     (lockstep SPMD wants tight bins; the truss ordering makes them tight,
+     Lemma 4.1);
+  2. oversize routing: tiles wider than the largest bin spill to the host
+     bitset recursion (counted in ``Stats.spilled_tiles``) instead of
+     aborting the query;
   3. early-termination routing (Section 5, vectorized): per-tile plexity is a
      popcount reduction; t<=2 tiles are answered by the closed-form
      2-plex formula (exact int64 Pascal-table arithmetic, branch-free);
@@ -19,20 +22,22 @@ the per-device partial counts are psum-reduced.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .engine_np import Stats
+from .engine_np import Stats, count_rec_C, count_rec_T
 from .graph import Graph
+from . import pipeline
 from . import tiles as tiles_mod
 from .bitops import pack_rows, pack_mask
 from ..kernels import ops as kops
 from ..kernels.common import pascal_table, popcount, unpack_bits
 
-_BINS = (32, 64, 128, 256)
+_BINS = pipeline.BINS
 
 
 @dataclasses.dataclass
@@ -54,16 +59,31 @@ def pack_tiles(tiles: List[tiles_mod.Tile], T: int) -> PackedTiles:
 
 
 def bin_tiles(g: Graph, k: int, order: str = "hybrid",
-              use_rule2: bool = True) -> Dict[int, PackedTiles]:
-    """Extract edge tiles and pack them into size bins."""
-    binned: Dict[int, List[tiles_mod.Tile]] = {}
-    for t in tiles_mod.edge_tiles(g, k, mode=order, use_rule2=use_rule2):
-        T = next((b for b in _BINS if t.s <= b), None)
-        if T is None:
-            raise ValueError(f"tile with {t.s} vertices exceeds max bin "
-                             f"{_BINS[-1]}; raise _BINS for this graph")
-        binned.setdefault(T, []).append(t)
-    return {T: pack_tiles(ts, T) for T, ts in sorted(binned.items())}
+              use_rule2: bool = True,
+              plan: Optional[pipeline.PipelinePlan] = None,
+              spill: Optional[List[tiles_mod.Tile]] = None,
+              bins: Sequence[int] = _BINS) -> Dict[int, PackedTiles]:
+    """Extract edge tiles and pack them into size bins (materialized).
+
+    Thin compatibility wrapper over :func:`repro.core.pipeline.stream_batches`
+    that concatenates the streamed chunks per bin.  Oversize tiles are
+    appended to ``spill`` when given, else raise (the pre-pipeline
+    behavior); :func:`count` always spills.
+    """
+    parts: Dict[int, List[pipeline.TileBatch]] = {}
+    for item in pipeline.stream_batches(plan or g, k, order=order,
+                                        use_rule2=use_rule2, bins=bins):
+        if isinstance(item, tiles_mod.Tile):
+            if spill is None:
+                raise ValueError(
+                    f"tile with {item.s} vertices exceeds max bin "
+                    f"{max(bins)}; raise bins or spill to host")
+            spill.append(item)
+            continue
+        parts.setdefault(item.T, []).append(item)
+    return {T: PackedTiles(np.concatenate([b.A for b in bs]),
+                           np.concatenate([b.cand for b in bs]))
+            for T, bs in sorted(parts.items())}
 
 
 # ---------------------------------------------------------------------------
@@ -152,10 +172,32 @@ def combine_counts(hard, nv, t, f, l: int, et: bool) -> int:
     return int(hard.sum() + closed.sum())
 
 
+def count_spilled(tile: tiles_mod.Tile, order: str, l: int, stats: Stats,
+                  et_t: int, use_rule2: bool) -> int:
+    """Host bitset recursion for one oversize tile (mirrors the host path)."""
+    stats.spilled_tiles += 1
+    cand = (1 << tile.s) - 1
+    if order == "truss":
+        return count_rec_T(tile.edges_ranked, cand, tile.s, l, stats,
+                           et_t=et_t)
+    return count_rec_C(tile.rows, cand, l, stats, colors=tile.colors,
+                       et_t=et_t, use_rule2=use_rule2)
+
+
 def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
           use_rule2: bool = True, method: str = "auto",
-          interpret: Optional[bool] = None, et_route: bool = True):
-    """Full-graph k-clique count on the accelerator engine."""
+          interpret: Optional[bool] = None, et_route: bool = True,
+          plan: Optional[pipeline.PipelinePlan] = None,
+          batch_size: int = 256, bins: Sequence[int] = _BINS,
+          stage_times: Optional[Dict[str, float]] = None):
+    """Full-graph k-clique count on the accelerator engine.
+
+    Streams capacity-batched packed tiles from :mod:`repro.core.pipeline`;
+    pass a prebuilt ``plan`` to amortize preprocessing across queries.
+    Oversize tiles are counted on the host (``stats.spilled_tiles``).
+    ``stage_times`` (optional dict) accumulates extract/pack/device/combine
+    wall-clock seconds.
+    """
     from .ebbkc import Result
     stats = Stats()
     if k == 1:
@@ -167,11 +209,28 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     max_tile = 0
     l = k - 2
     et = et_route and et_t >= 2
-    for T, packed in bin_tiles(g, k, order, use_rule2).items():
-        ntiles += packed.A.shape[0]
-        max_tile = max(max_tile, T)
+    for item in pipeline.stream_batches(plan or g, k, order=order,
+                                        use_rule2=use_rule2,
+                                        batch_size=batch_size, bins=bins,
+                                        timings=stage_times):
+        if isinstance(item, tiles_mod.Tile):
+            ntiles += 1
+            max_tile = max(max_tile, item.s)
+            total += count_spilled(item, order, l, stats, et_t, use_rule2)
+            continue
+        ntiles += item.B
+        max_tile = max(max_tile, item.T)
+        t0 = time.perf_counter()
         hard, nv, t, f = count_packed(
-            jnp.asarray(packed.A), jnp.asarray(packed.cand), l,
+            jnp.asarray(item.A), jnp.asarray(item.cand), l,
             method=method, et=et, interpret=interpret)
+        if stage_times is not None:
+            # async dispatch: block so device time is not billed to combine
+            jax.block_until_ready((hard, nv, t, f))
+        t1 = time.perf_counter()
         total += combine_counts(hard, nv, t, f, l, et)
+        if stage_times is not None:
+            stage_times["device"] = stage_times.get("device", 0.) + t1 - t0
+            stage_times["combine"] = stage_times.get("combine", 0.) \
+                + time.perf_counter() - t1
     return Result(total, stats, ntiles, max_tile)

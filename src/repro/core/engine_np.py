@@ -33,6 +33,7 @@ class Stats:
     pruned_size: int = 0     # pruned by |V(g)| < l
     pruned_color: int = 0    # pruned by Rules (1)/(2)
     peak_graph: int = 0      # largest branch graph seen (roofline proxy)
+    spilled_tiles: int = 0   # oversize tiles routed device -> host recursion
 
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:

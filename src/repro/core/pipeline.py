@@ -1,0 +1,519 @@
+"""Unified streaming tile pipeline: CSR -> tau-bounded tiles -> packed batches.
+
+This is the shared front-end for every EBBkC consumer (DESIGN.md section 2).
+The paper's top-level edge branching produces one tau-bounded tile per edge
+(Lemma 4.1); producing those tiles is the only data-dependent part of the
+whole dataflow, so it must be vectorized end to end:
+
+1. **Membership table** (:func:`TileTable` builders): one bulk ragged CSR
+   expansion enumerates, for every edge at once, the common neighbors that
+   survive the ordering filter (pi_tau rank for truss/hybrid, color-DAG
+   position for color mode).  The table is *k-independent*: a query for any
+   k only thresholds tile sizes (and color rules), so a
+   :class:`PipelinePlan` amortizes all preprocessing across repeated
+   queries on the same graph (the serving scenario).
+2. **Capacity-based streaming batcher** (:func:`stream_batches`): tiles are
+   routed to power-of-two size bins and packed ``batch_size`` at a time
+   into fixed-shape ``(B, T, W)`` uint32 bitset batches -- host memory is
+   bounded by one in-flight chunk per bin instead of the whole graph.
+   Packing is vectorized: pairwise adjacency via one ``searchsorted`` over
+   canonical edge keys, bit packing via ``np.packbits`` straight into the
+   uint32 word layout the kernels consume.  Tiles wider than the largest
+   bin are yielded as plain :class:`~repro.core.tiles.Tile` objects so the
+   engine can spill them to the host recursion instead of aborting.
+3. **Scheduler metadata**: every :class:`TileBatch` carries per-tile
+   ``sizes``/``nedges`` arrays -- exactly the cost model inputs
+   :func:`repro.runtime.clique_scheduler.schedule_tiles` consumes, so
+   device bins map one-to-one onto packed batches.
+
+The pure-Python extractor in :mod:`repro.core.tiles` is kept as the
+reference oracle; parity tests assert byte-identical packed batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .graph import Graph, greedy_coloring, color_vertex_order
+from .tiles import Tile
+from .truss import TrussDecomposition, truss_decomposition
+
+#: power-of-two tile-size bins; tiles wider than the last bin spill to host
+BINS = (32, 64, 128, 256)
+
+_LITTLE = sys.byteorder == "little"
+
+
+def _pack_bits(dense: np.ndarray) -> np.ndarray:
+    """(..., T) bool -> (..., T//32) uint32; bit j of word w = column 32w+j.
+
+    Matches :func:`repro.core.bitops.pack_rows` bit-for-bit but runs as one
+    ``np.packbits`` call instead of a per-bit Python loop.
+    """
+    packed = np.packbits(dense, axis=-1, bitorder="little")
+    if not _LITTLE:  # pragma: no cover - big-endian hosts
+        shape = packed.shape
+        packed = packed.reshape(shape[:-1] + (-1, 4))[..., ::-1].reshape(shape)
+    return np.ascontiguousarray(packed).view(np.uint32)
+
+
+def _ragged_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(owner, position-within-segment) index arrays for ragged segments."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    owner = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+    seg = np.repeat(np.cumsum(counts) - counts, counts)
+    pos = np.arange(total, dtype=np.int64) - seg
+    return owner, pos
+
+
+# ---------------------------------------------------------------------------
+# k-independent membership tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TileTable:
+    """Per-edge candidate-tile membership under one ordering family.
+
+    ``family`` is "truss" (shared by truss and hybrid modes: members are the
+    common neighbors reachable via edges ranked after e in pi_tau) or
+    "color" (members are common out-neighbors in the color DAG).  Everything
+    here is independent of k; :meth:`select` applies the k-dependent
+    filters.
+    """
+    family: str
+    edge_id: np.ndarray           # (nt,) source edge id per candidate tile
+    anchors: np.ndarray           # (nt, 2) anchor vertices (S of Eq. 2)
+    offsets: np.ndarray           # (nt+1,) ragged offsets into ``verts``
+    verts: np.ndarray             # flat member vertices, canonical inner order
+    thresh: np.ndarray            # (nt,) truss: rank(e); color: 0
+    ekeys: np.ndarray             # sorted canonical edge keys (adjacency test)
+    erank: Optional[np.ndarray]   # truss: pi_tau rank per edge id
+    member_colors: Optional[np.ndarray] = None  # color: flat member colors
+    ncolors: Optional[np.ndarray] = None        # color: distinct per tile
+    rule1: Optional[np.ndarray] = None          # color: (nt,2) endpoint colors
+
+    @property
+    def ntiles(self) -> int:
+        return int(self.edge_id.shape[0])
+
+    def sizes(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def select(self, k: int, use_rule2: bool = True) -> np.ndarray:
+        """Candidate tile ids surviving the k filters, canonical order."""
+        keep = self.sizes() >= max(k - 2, 1)
+        if self.family == "color":
+            keep &= (self.rule1[:, 0] >= k) & (self.rule1[:, 1] >= k - 1)
+            if use_rule2:
+                keep &= self.ncolors >= k - 2
+        return np.nonzero(keep)[0]
+
+
+def _build_truss_table(g: Graph, td: TrussDecomposition) -> TileTable:
+    ek = g.edge_keys()
+    m = g.m
+    if m == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return TileTable("truss", z, np.zeros((0, 2), np.int64),
+                         np.zeros(1, np.int64), z, z, ek, td.rank)
+    deg = np.diff(g.indptr)
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    swap = deg[u] > deg[v]
+    a = np.where(swap, v, u)
+    b = np.where(swap, u, v)
+    # pi_tau rank per directed CSR slot
+    src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
+    rank_csr = td.rank[g.edge_ids(src, g.indices)]
+    r_e = td.rank
+    owner, pos = _ragged_expand(deg[a])
+    idx = g.indptr[a][owner] + pos
+    w = g.indices[idx]
+    keep = (rank_csr[idx] > r_e[owner]) & (w != b[owner])
+    owner, w = owner[keep], w[keep]
+    bb = b[owner]
+    lo = np.minimum(bb, w)
+    hi = np.maximum(bb, w)
+    keys = lo * np.int64(g.n) + hi
+    p = np.searchsorted(ek, keys)
+    p = np.clip(p, 0, m - 1)
+    hit = (ek[p] == keys) & (td.rank[p] > r_e[owner])
+    E, W = owner[hit], w[hit]
+    # canonical order: reverse pi_tau over tiles, ascending vertex id inside
+    order = np.lexsort((W, -r_e[E]))
+    E, W = E[order], W[order]
+    if E.size:
+        starts = np.concatenate(
+            [[0], np.nonzero(np.diff(E) != 0)[0] + 1]).astype(np.int64)
+        offsets = np.concatenate([starts, [E.size]]).astype(np.int64)
+        tile_edge = E[starts]
+    else:
+        offsets = np.zeros(1, dtype=np.int64)
+        tile_edge = np.zeros(0, dtype=np.int64)
+    return TileTable("truss", tile_edge, g.edges[tile_edge],
+                     offsets, W, r_e[tile_edge], ek, td.rank)
+
+
+def _build_color_table(g: Graph, colors: np.ndarray) -> TileTable:
+    ek = g.edge_keys()
+    m = g.m
+    if m == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return TileTable("color", z, np.zeros((0, 2), np.int64),
+                         np.zeros(1, np.int64), z, z, ek, None,
+                         member_colors=z, ncolors=z,
+                         rule1=np.zeros((0, 2), np.int64))
+    vorder = color_vertex_order(colors)
+    vid = np.empty(g.n, dtype=np.int64)
+    vid[vorder] = np.arange(g.n)
+    u0, v0 = g.edges[:, 0], g.edges[:, 1]
+    swapc = vid[u0] > vid[v0]
+    ulo = np.where(swapc, v0, u0)
+    vhi = np.where(swapc, u0, v0)
+    deg = np.diff(g.indptr)
+    a = np.where(deg[ulo] <= deg[vhi], ulo, vhi)
+    b = np.where(deg[ulo] <= deg[vhi], vhi, ulo)
+    owner, pos = _ragged_expand(deg[a])
+    idx = g.indptr[a][owner] + pos
+    w = g.indices[idx]
+    # member iff vid[w] beyond both endpoints (DAG out-neighbor of each)
+    keep = (vid[w] > vid[vhi][owner]) & (w != b[owner])
+    owner, w = owner[keep], w[keep]
+    bb = b[owner]
+    lo = np.minimum(bb, w)
+    hi = np.maximum(bb, w)
+    keys = lo * np.int64(g.n) + hi
+    p = np.searchsorted(ek, keys)
+    p = np.clip(p, 0, m - 1)
+    hit = ek[p] == keys
+    E, W = owner[hit], w[hit]
+    # canonical order: edge id ascending, members by color-DAG position
+    order = np.lexsort((vid[W], E))
+    E, W = E[order], W[order]
+    if E.size:
+        starts = np.concatenate(
+            [[0], np.nonzero(np.diff(E) != 0)[0] + 1]).astype(np.int64)
+        offsets = np.concatenate([starts, [E.size]]).astype(np.int64)
+        tile_edge = E[starts]
+    else:
+        offsets = np.zeros(1, dtype=np.int64)
+        tile_edge = np.zeros(0, dtype=np.int64)
+    mcol = colors[W]
+    nt = tile_edge.size
+    sizes = np.diff(offsets)
+    tid_rep, _ = _ragged_expand(sizes)
+    if E.size:
+        o2 = np.lexsort((mcol, tid_rep))
+        c2, t2 = mcol[o2], tid_rep[o2]
+        new = np.concatenate([[True], (t2[1:] != t2[:-1]) |
+                              (c2[1:] != c2[:-1])])
+        ncolors = np.bincount(t2[new], minlength=nt)
+    else:
+        ncolors = np.zeros(0, dtype=np.int64)
+    rule1 = np.stack([colors[ulo[tile_edge]], colors[vhi[tile_edge]]], axis=1)
+    return TileTable("color", tile_edge,
+                     np.stack([ulo[tile_edge], vhi[tile_edge]], axis=1),
+                     offsets, W, np.zeros(nt, dtype=np.int64), ek, None,
+                     member_colors=mcol, ncolors=ncolors, rule1=rule1)
+
+
+# ---------------------------------------------------------------------------
+# PipelinePlan: cached preprocessing for repeated queries on one graph
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelinePlan:
+    """Per-graph preprocessing cache (truss order, coloring, tables).
+
+    Build once, query many times: ``stream_batches(plan, k)`` for any k
+    reuses the decomposition and the membership table, so a serving process
+    pays preprocessing once per graph snapshot.
+    """
+    g: Graph
+    _td: Optional[TrussDecomposition] = None
+    _colors: Optional[np.ndarray] = None
+    _tables: Dict[str, TileTable] = dataclasses.field(default_factory=dict)
+
+    @property
+    def td(self) -> TrussDecomposition:
+        if self._td is None:
+            self._td = truss_decomposition(self.g)
+        return self._td
+
+    @property
+    def colors(self) -> np.ndarray:
+        if self._colors is None:
+            self._colors, _ = greedy_coloring(self.g)
+        return self._colors
+
+    def table(self, mode: str) -> TileTable:
+        family = "color" if mode == "color" else "truss"
+        if family not in self._tables:
+            if family == "truss":
+                self._tables[family] = _build_truss_table(self.g, self.td)
+            else:
+                self._tables[family] = _build_color_table(self.g, self.colors)
+        return self._tables[family]
+
+
+def build_plan(g: Graph, order: str = "hybrid") -> PipelinePlan:
+    """Eagerly preprocess ``g`` for ``order`` (truss/hybrid/color)."""
+    if order not in ("truss", "hybrid", "color"):
+        raise ValueError(f"unknown edge-tile mode: {order}")
+    plan = PipelinePlan(g=g)
+    plan.table(order)
+    return plan
+
+
+def _as_plan(source: Union[Graph, PipelinePlan]) -> PipelinePlan:
+    return source if isinstance(source, PipelinePlan) else PipelinePlan(source)
+
+
+# ---------------------------------------------------------------------------
+# vectorized chunk packing
+# ---------------------------------------------------------------------------
+
+# pairwise-expansion budget per internal slice (caps peak index memory)
+_PAIR_BUDGET = 4_000_000
+
+
+def _chunk_dense(g: Graph, table: TileTable, ids: np.ndarray, T: int):
+    """Dense bool adjacency for one chunk of candidate tiles.
+
+    Returns (D (B,T,T) bool, V (B,T) padded member ids, sizes, nedges,
+    pairs) with ``pairs = (tile, i, j, pair_rank)`` for i<j adjacent pairs
+    (pair_rank is the pi_tau rank of the pair edge for the truss family).
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    B = ids.size
+    sz = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)
+    owner, pos = _ragged_expand(sz)
+    V = np.zeros((B, T), dtype=np.int64)
+    V[owner, pos] = table.verts[table.offsets[ids][owner] + pos]
+    D = np.zeros((B, T, T), dtype=bool)
+    po_l: List[np.ndarray] = []
+    pi_l: List[np.ndarray] = []
+    pj_l: List[np.ndarray] = []
+    pr_l: List[np.ndarray] = []
+    # slice the chunk so the i x j pair expansion stays within budget
+    start = 0
+    quad = sz.astype(np.int64) ** 2
+    cum = np.cumsum(quad)
+    while start < B:
+        stop = int(np.searchsorted(
+            cum, (cum[start - 1] if start else 0) + _PAIR_BUDGET) + 1)
+        stop = max(start + 1, min(stop, B))
+        sl = slice(start, stop)
+        so = sz[sl]
+        powner, ppos = _ragged_expand(so * so)
+        s_rep = so[powner]
+        i = ppos // s_rep
+        j = ppos % s_rep
+        keep = i < j
+        powner, i, j = powner[keep], i[keep], j[keep]
+        powner_g = powner + start
+        gu = V[powner_g, i]
+        gv = V[powner_g, j]
+        lo = np.minimum(gu, gv)
+        hi = np.maximum(gu, gv)
+        keys = lo * np.int64(g.n) + hi
+        p = np.searchsorted(table.ekeys, keys)
+        p = np.clip(p, 0, max(g.m - 1, 0))
+        hit = (table.ekeys[p] == keys) if g.m else np.zeros(0, bool)
+        if table.family == "truss":
+            hit &= table.erank[p] > table.thresh[ids[powner_g]]
+        powner_g, i, j, p = powner_g[hit], i[hit], j[hit], p[hit]
+        D[powner_g, i, j] = True
+        D[powner_g, j, i] = True
+        po_l.append(powner_g)
+        pi_l.append(i)
+        pj_l.append(j)
+        if table.family == "truss":
+            pr_l.append(table.erank[p])
+        start = stop
+    po = np.concatenate(po_l) if po_l else np.zeros(0, np.int64)
+    pi = np.concatenate(pi_l) if pi_l else np.zeros(0, np.int64)
+    pj = np.concatenate(pj_l) if pj_l else np.zeros(0, np.int64)
+    pr = (np.concatenate(pr_l) if pr_l else np.zeros(0, np.int64)) \
+        if table.family == "truss" else None
+    nedges = np.bincount(po, minlength=B).astype(np.int64)
+    return D, V, sz, nedges, (po, pi, pj, pr)
+
+
+def _greedy_color_chunk(D: np.ndarray, sz: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized-across-tiles greedy coloring, replicating ``_local_color``.
+
+    Processing order per tile: degree descending, local id descending (the
+    reference's ``sorted(..., reverse=True)`` tie-break); color = smallest
+    positive value unused by any tile-neighbor.  Returns (colors (B,T) with
+    0 on padding, perm (B,T) = relabel order: color desc, id asc, padding
+    last).
+    """
+    B, T, _ = D.shape
+    ids = np.broadcast_to(np.arange(T, dtype=np.int64), (B, T))
+    deg = D.sum(-1).astype(np.int64)
+    real = ids < sz[:, None]
+    degk = np.where(real, deg, -1)
+    order = np.lexsort((-ids, -degk), axis=1)
+    colors = np.zeros((B, T), dtype=np.int64)
+    rows = np.arange(B)
+    for t in range(int(sz.max(initial=0))):
+        v = order[:, t]
+        act = t < sz
+        nb = D[rows, v]                                   # (B, T)
+        ncol = np.where(nb, colors, 0)
+        present = np.zeros((B, T + 2), dtype=bool)
+        present[rows[:, None], ncol] = True
+        mex = np.argmin(present[:, 1:], axis=1) + 1       # first free >= 1
+        colors[rows[act], v[act]] = mex[act]
+    perm = np.lexsort((ids, -colors), axis=1)
+    return colors, perm
+
+
+def _relabel_chunk(D, V, colors, perm):
+    B = D.shape[0]
+    rows = np.arange(B)
+    D2 = D[rows[:, None, None], perm[:, :, None], perm[:, None, :]]
+    V2 = V[rows[:, None], perm]
+    C2 = colors[rows[:, None], perm]
+    return D2, V2, C2
+
+
+@dataclasses.dataclass
+class TileBatch:
+    """One fixed-shape packed batch plus per-tile scheduler metadata."""
+    T: int
+    A: np.ndarray        # (B, T, W) uint32 adjacency bitsets
+    cand: np.ndarray     # (B, W) uint32 candidate masks
+    sizes: np.ndarray    # (B,) int32 member counts
+    nedges: np.ndarray   # (B,) int32 tile edge counts (cost-model input)
+    anchors: np.ndarray  # (B, 2) int64 anchor vertices
+
+    @property
+    def B(self) -> int:
+        return int(self.A.shape[0])
+
+
+def _pack_batch(g: Graph, table: TileTable, ids: np.ndarray, T: int,
+                mode: str) -> TileBatch:
+    D, V, sz, nedges, _ = _chunk_dense(g, table, ids, T)
+    if mode == "hybrid":
+        colors, perm = _greedy_color_chunk(D, sz)
+        D, V, _ = _relabel_chunk(D, V, colors, perm)
+    A = _pack_bits(D)
+    cand = _pack_bits(np.arange(T)[None, :] < sz[:, None])
+    return TileBatch(T, A, cand, sz.astype(np.int32),
+                     nedges.astype(np.int32), table.anchors[ids].copy())
+
+
+def _tiles_from_ids(g: Graph, table: TileTable, ids: np.ndarray,
+                    mode: str) -> Iterator[Tile]:
+    """Materialize reference-identical :class:`Tile` objects for ``ids``."""
+    ids = np.asarray(ids, dtype=np.int64)
+    chunk = 512
+    for c0 in range(0, ids.size, chunk):
+        sub = ids[c0:c0 + chunk]
+        sz = (table.offsets[sub + 1] - table.offsets[sub]).astype(np.int64)
+        T = max(8, int(-(-int(sz.max(initial=1)) // 8) * 8))
+        D, V, _, nedges, (po, pi, pj, pr) = _chunk_dense(g, table, sub, T)
+        colors_out: Optional[np.ndarray] = None
+        if mode == "hybrid":
+            colors, perm = _greedy_color_chunk(D, sz)
+            D, V, colors_out = _relabel_chunk(D, V, colors, perm)
+        elif mode == "color":
+            mowner, mpos = _ragged_expand(sz)
+            colors_out = np.zeros((sub.size, T), dtype=np.int64)
+            colors_out[mowner, mpos] = table.member_colors[
+                table.offsets[sub][mowner] + mpos]
+        edges_ranked: Optional[List[List[Tuple[int, int]]]] = None
+        if mode == "truss":
+            o = np.lexsort((pr, po))
+            po_s, pi_s, pj_s = po[o], pi[o], pj[o]
+            bounds = np.concatenate(
+                [[0], np.cumsum(np.bincount(po_s, minlength=sub.size))])
+            edges_ranked = [
+                list(zip(pi_s[bounds[b]:bounds[b + 1]].tolist(),
+                         pj_s[bounds[b]:bounds[b + 1]].tolist()))
+                for b in range(sub.size)]
+        row_bytes = np.packbits(D, axis=-1, bitorder="little")
+        for b in range(sub.size):
+            s = int(sz[b])
+            rows = [int.from_bytes(row_bytes[b, r].tobytes(), "little")
+                    for r in range(s)]
+            anchor = (int(table.anchors[sub[b], 0]),
+                      int(table.anchors[sub[b], 1]))
+            verts = V[b, :s].copy()
+            if mode == "truss":
+                yield Tile(anchor, verts, rows, int(nedges[b]),
+                           edges_ranked=edges_ranked[b])
+            else:
+                yield Tile(anchor, verts, rows, int(nedges[b]),
+                           colors=[int(c) for c in colors_out[b, :s]])
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def iter_tiles(source: Union[Graph, PipelinePlan], k: int,
+               mode: str = "hybrid", use_rule2: bool = True
+               ) -> Iterator[Tile]:
+    """Vectorized replacement for :func:`repro.core.tiles.edge_tiles`.
+
+    Yields tiles identical (same order, members, rows, colors/ranks) to the
+    Python reference extractor, built from the plan's membership table.
+    """
+    if mode not in ("truss", "hybrid", "color"):
+        raise ValueError(f"unknown edge-tile mode: {mode}")
+    plan = _as_plan(source)
+    table = plan.table(mode)
+    ids = table.select(k, use_rule2=use_rule2)
+    yield from _tiles_from_ids(plan.g, table, ids, mode)
+
+
+def stream_batches(source: Union[Graph, PipelinePlan], k: int,
+                   order: str = "hybrid", use_rule2: bool = True,
+                   batch_size: int = 256,
+                   bins: Sequence[int] = BINS,
+                   timings: Optional[Dict[str, float]] = None
+                   ) -> Iterator[Union[TileBatch, Tile]]:
+    """Stream fixed-shape packed batches (plus oversize spill tiles).
+
+    Tiles are routed to the smallest bin T >= size and packed
+    ``batch_size`` at a time, so peak host memory is one chunk per bin.
+    Tiles wider than ``bins[-1]`` are yielded as :class:`Tile` objects for
+    the caller to spill to the host recursion.  When ``timings`` is given,
+    "extract" (table build + select) and "pack" seconds are accumulated
+    into it.
+    """
+    if order not in ("truss", "hybrid", "color"):
+        raise ValueError(f"unknown edge-tile mode: {order}")
+    bins = tuple(sorted(int(b) for b in bins))
+    if any(b % 32 for b in bins):
+        raise ValueError("bins must be multiples of 32")
+    plan = _as_plan(source)
+    t0 = time.perf_counter()
+    table = plan.table(order)
+    ids = table.select(k, use_rule2=use_rule2)
+    sizes = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)
+    binidx = np.searchsorted(np.asarray(bins), sizes)
+    if timings is not None:
+        timings["extract"] = timings.get("extract", 0.0) \
+            + (time.perf_counter() - t0)
+    for tid in ids[binidx == len(bins)]:
+        yield from _tiles_from_ids(plan.g, table, np.asarray([tid]), order)
+    for bi, T in enumerate(bins):
+        sel = ids[binidx == bi]
+        for c0 in range(0, sel.size, batch_size):
+            t1 = time.perf_counter()
+            batch = _pack_batch(plan.g, table, sel[c0:c0 + batch_size], T,
+                                order)
+            if timings is not None:
+                timings["pack"] = timings.get("pack", 0.0) \
+                    + (time.perf_counter() - t1)
+            yield batch

@@ -1,5 +1,10 @@
 """Top-level branch extraction: edges -> tau-bounded dense tiles.
 
+NOTE: this module is the pure-Python *reference oracle*.  Production
+consumers (host and JAX engines, launcher, service) go through the
+vectorized :mod:`repro.core.pipeline`, whose parity tests assert it
+reproduces these tiles exactly (same order, members, rows, colors, ranks).
+
 This is the heart of the TPU adaptation: the first (and only data-dependent)
 level of EBBkC branching is materialized as a batch of small dense subgraph
 "tiles", one per edge.  With the truss-based ordering every tile has at most

@@ -28,19 +28,26 @@ class TrussDecomposition:
 
 
 def edge_supports(g: Graph) -> np.ndarray:
-    """Initial support (number of triangles containing each edge)."""
-    adj = [set(g.neighbors(v).tolist()) for v in range(g.n)]
-    sup = np.zeros(g.m, dtype=np.int64)
-    for i in range(g.m):
-        u, v = int(g.edges[i, 0]), int(g.edges[i, 1])
-        a, b = (u, v) if len(adj[u]) <= len(adj[v]) else (v, u)
-        s = 0
-        bv = adj[b]
-        for w in adj[a]:
-            if w in bv:
-                s += 1
-        sup[i] = s
-    return sup
+    """Initial support (number of triangles containing each edge).
+
+    Vectorized: one ragged CSR expansion of the lower-degree endpoint's
+    neighborhood per edge, membership-tested against the sorted canonical
+    edge keys with a single ``searchsorted``.
+    """
+    if g.m == 0:
+        return np.zeros(0, dtype=np.int64)
+    deg = np.diff(g.indptr)
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    a = np.where(deg[u] <= deg[v], u, v)
+    b = np.where(deg[u] <= deg[v], v, u)
+    counts = deg[a]
+    owner = np.repeat(np.arange(g.m, dtype=np.int64), counts)
+    seg = np.repeat(np.cumsum(counts) - counts, counts)
+    idx = g.indptr[a][owner] + (np.arange(int(counts.sum()),
+                                          dtype=np.int64) - seg)
+    w = g.indices[idx]
+    hit = g.has_edges(b[owner], w)
+    return np.bincount(owner[hit], minlength=g.m).astype(np.int64)
 
 
 def truss_decomposition(g: Graph) -> TrussDecomposition:

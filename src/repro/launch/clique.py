@@ -2,9 +2,11 @@
 
 ``python -m repro.launch.clique --graph rmat:14 --k 5``
 
-Pipeline: host preprocessing (truss order + tile extraction + LPT
-cost-balanced scheduling, Section 6.2(7) EdgeParallel) -> packed bitset
-batches sharded over all mesh axes -> device kernels -> psum.
+Pipeline: host preprocessing (truss order cached in a PipelinePlan) ->
+vectorized extraction + capacity-batched packing (repro.core.pipeline) ->
+LPT cost-balanced batch scheduling (Section 6.2(7) EdgeParallel; device
+bins map one-to-one onto packed batches) -> device kernels -> psum.
+Oversize tiles spill to the host recursion instead of aborting.
 On this CPU container it runs on however many host devices exist; the
 512-way layout is exercised by dryrun.py.
 """
@@ -17,10 +19,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import ebbkc, engine_jax
+from ..core import ebbkc, engine_jax, pipeline
+from ..core import tiles as tiles_mod
+from ..core.engine_np import Stats
 from ..core.graph import Graph
 from ..data import graphs as gdata
-from ..runtime.clique_scheduler import schedule_tiles
+from ..runtime.clique_scheduler import schedule_batches
 
 
 def load_graph(desc: str) -> Graph:
@@ -42,33 +46,56 @@ def main():
     ap.add_argument("--graph", default="rmat:12")
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--order", default="hybrid")
+    ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
     args = ap.parse_args()
 
     g = load_graph(args.graph)
     print(f"graph: n={g.n} m={g.m}")
-    t0 = time.time()
-    binned = engine_jax.bin_tiles(g, args.k, order=args.order)
-    t1 = time.time()
-    total = 0
     l = args.k - 2
     n_dev = jax.device_count()
-    for T, packed in binned.items():
-        tiles_meta = [type("T", (), {"s": T, "nedges": T})()] \
-            * packed.A.shape[0]
-        _, stats = schedule_tiles(tiles_meta, l, n_dev)
-        hard, nv, t, f = engine_jax.count_packed(
-            jnp.asarray(packed.A), jnp.asarray(packed.cand), l,
-            et=True, interpret=True)
-        total += engine_jax.combine_counts(hard, nv, t, f, l, et=True)
-        print(f"  bin T={T}: {packed.A.shape[0]} tiles, "
-              f"balance max/mean={stats['max_over_mean']:.3f}")
-    t2 = time.time()
+
+    t0 = time.time()
+    plan = pipeline.build_plan(g, order=args.order)
+    t_plan = time.time() - t0
+
+    # stream packed batches off the pipeline; spill oversize tiles to host
+    t0 = time.time()
+    batches = []
+    spilled = []
+    for item in pipeline.stream_batches(plan, args.k, order=args.order,
+                                        batch_size=args.batch_size):
+        (spilled if isinstance(item, tiles_mod.Tile) else batches).append(item)
+    t_pack = time.time() - t0
+
+    # each packed batch is one dispatch unit; LPT-balance them over devices
+    device_bins, sched = schedule_batches(batches, l, n_dev)
+
+    t0 = time.time()
+    total = 0
+    stats = Stats()
+    for d, bin_ids in enumerate(device_bins):
+        for bi in bin_ids:
+            b = batches[bi]
+            hard, nv, t, f = engine_jax.count_packed(
+                jnp.asarray(b.A), jnp.asarray(b.cand), l,
+                et=True, interpret=True)
+            total += engine_jax.combine_counts(hard, nv, t, f, l, et=True)
+    for tile in spilled:
+        total += engine_jax.count_spilled(tile, args.order, l, stats,
+                                          et_t=3, use_rule2=True)
+    t_count = time.time() - t0
+
+    n_tiles = sum(b.B for b in batches) + len(spilled)
+    print(f"batches={len(batches)} tiles={n_tiles} "
+          f"spilled={stats.spilled_tiles} devices={n_dev} "
+          f"balance max/mean={sched['max_over_mean']:.3f}")
     print(f"k={args.k}: {total} cliques "
-          f"(extract {t1 - t0:.2f}s, count {t2 - t1:.2f}s)")
+          f"(plan {t_plan:.2f}s, extract+pack {t_pack:.2f}s, "
+          f"count {t_count:.2f}s)")
     if args.verify:
-        ref = ebbkc.count(g, args.k, order=args.order).count
+        ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
         print(f"host engine: {ref}  match={ref == total}")
 
 

@@ -1,3 +1,4 @@
 """Training / serving runtime: fault-tolerant loops + clique scheduler."""
 from .train_loop import TrainLoop, TrainLoopConfig
-from .clique_scheduler import balanced_bins, schedule_tiles
+from .clique_scheduler import (balanced_bins, schedule_batches,
+                               schedule_tiles, tile_costs)

@@ -18,11 +18,20 @@ import numpy as np
 
 
 def tile_cost(s: int, nedges: int, l: int) -> float:
+    return float(tile_costs(np.asarray([s]), np.asarray([nedges]), l)[0])
+
+
+def tile_costs(s: np.ndarray, nedges: np.ndarray, l: int) -> np.ndarray:
+    """Vectorized :func:`tile_cost` over the per-tile metadata arrays that
+    :class:`repro.core.pipeline.TileBatch` carries (``sizes``/``nedges``)."""
+    s = np.asarray(s, dtype=np.float64)
+    e = np.asarray(nedges, dtype=np.float64)
     if l <= 1:
         return 1.0 + s
     if l == 2:
-        return 1.0 + nedges
-    return 1.0 + nedges * max(1.0, s / 4.0) ** (l - 3 if l > 3 else 0.5)
+        return 1.0 + e
+    expo = l - 3 if l > 3 else 0.5
+    return 1.0 + e * np.maximum(1.0, s / 4.0) ** expo
 
 
 def balanced_bins(costs: Sequence[float], n_bins: int
@@ -40,13 +49,20 @@ def balanced_bins(costs: Sequence[float], n_bins: int
 
 
 def schedule_tiles(tiles, l: int, n_devices: int, overdecompose: int = 16):
-    """tiles: list with .s and .nedges. Returns (device -> tile ids, stats).
+    """Returns (device -> tile ids, stats).
 
-    Over-decomposition bounds the requeue unit for straggler mitigation
-    while LPT keeps static balance tight (max/mean load reported).
+    ``tiles`` is either a list of objects with ``.s``/``.nedges`` or a
+    :class:`repro.core.pipeline.TileBatch` (its ``sizes``/``nedges``
+    metadata arrays are the cost-model inputs -- the batcher and the
+    scheduler share one cost vocabulary).  Over-decomposition bounds the
+    requeue unit for straggler mitigation while LPT keeps static balance
+    tight (max/mean load reported).
     """
-    costs = [tile_cost(t.s, t.nedges, l) for t in tiles]
-    n_bins = max(1, min(len(tiles), n_devices * overdecompose))
+    if hasattr(tiles, "sizes") and hasattr(tiles, "nedges"):
+        costs = tile_costs(tiles.sizes, tiles.nedges, l)
+    else:
+        costs = [tile_cost(t.s, t.nedges, l) for t in tiles]
+    n_bins = max(1, min(len(costs), n_devices * overdecompose))
     bins, loads = balanced_bins(costs, n_bins)
     device_bins: List[List[int]] = [[] for _ in range(n_devices)]
     order = np.argsort(-loads)
@@ -58,5 +74,25 @@ def schedule_tiles(tiles, l: int, n_devices: int, overdecompose: int = 16):
     stats = {
         "max_over_mean": float(dev_loads.max() / max(dev_loads.mean(), 1e-9)),
         "device_loads": dev_loads,
+    }
+    return device_bins, stats
+
+
+def schedule_batches(batches: Sequence, l: int, n_devices: int
+                     ) -> Tuple[List[List[int]], dict]:
+    """LPT-assign whole packed batches to devices.
+
+    ``batches``: sequence of :class:`repro.core.pipeline.TileBatch`.  Each
+    batch is one dispatch unit (one fixed-shape device call), so device
+    bins map one-to-one onto packed batches; a batch's cost is the sum of
+    its per-tile cost-model terms.  Returns (device -> batch indices,
+    stats with per-device loads and max/mean balance).
+    """
+    costs = [float(tile_costs(b.sizes, b.nedges, l).sum()) for b in batches]
+    device_bins, loads = balanced_bins(costs, n_devices)
+    stats = {
+        "max_over_mean": float(loads.max() / max(loads.mean(), 1e-9)),
+        "device_loads": loads,
+        "batch_costs": np.asarray(costs),
     }
     return device_bins, stats

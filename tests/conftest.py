@@ -7,6 +7,77 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+
+def _install_hypothesis_shim():
+    """Minimal deterministic stand-in so the suite collects without
+    ``hypothesis`` installed (it is optional, see requirements-dev.txt).
+
+    Supports the subset the tests use: ``@given(st.integers/floats/lists)``
+    stacked with ``@settings(max_examples=..., deadline=...)``.  Each
+    example is drawn from a fixed-seed PRNG, so runs are reproducible (no
+    shrinking, no database).
+    """
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd):
+            return self._draw(rnd)
+
+    st = types.ModuleType("hypothesis.strategies")
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rnd):
+            n = rnd.randint(min_size, max_size)
+            return [elements.example(rnd) for _ in range(n)]
+        return _Strategy(draw)
+
+    st.integers, st.floats, st.lists = integers, floats, lists
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", None) \
+                    or getattr(fn, "_shim_max_examples", 20)
+                n = min(n, int(os.environ.get("HYPOTHESIS_SHIM_MAX", n)))
+                rnd = random.Random(0xEBB)
+                for _ in range(n):
+                    fn(*args, *(s.example(rnd) for s in strats), **kwargs)
+            # deliberately NOT functools.wraps: pytest must not see the
+            # wrapped function's strategy parameters as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.strategies = st
+    hyp.given = given
+    hyp.settings = settings
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_shim()
+
 import numpy as np
 import pytest
 

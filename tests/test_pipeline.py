@@ -1,0 +1,147 @@
+"""Unified tile pipeline: parity with the Python reference oracle,
+streaming-batcher invariants, scheduler mapping, oversize spill."""
+import numpy as np
+import pytest
+
+from repro.core import ebbkc, engine_jax, pipeline
+from repro.core import tiles as tiles_mod
+from repro.data import erdos_renyi, planted_cliques, rmat_graph
+from repro.runtime.clique_scheduler import schedule_batches, schedule_tiles
+
+from conftest import random_graph
+
+
+def parity_suite():
+    return {
+        "rmat": rmat_graph(8, 4, seed=7),
+        "er": erdos_renyi(120, 0.12, seed=1),
+        "plant": planted_cliques(150, 4, 9, p_noise=0.02, seed=5),
+    }
+
+
+def tiles_equal(a, b):
+    return (a.anchor == b.anchor and np.array_equal(a.verts, b.verts)
+            and a.rows == b.rows and a.nedges == b.nedges
+            and a.colors == b.colors and a.edges_ranked == b.edges_ranked)
+
+
+@pytest.mark.parametrize("mode", ["truss", "color", "hybrid"])
+def test_iter_tiles_matches_reference(mode):
+    for name, g in parity_suite().items():
+        for k in range(3, 8):
+            ref = list(tiles_mod.edge_tiles(g, k, mode=mode))
+            got = list(pipeline.iter_tiles(g, k, mode=mode))
+            assert len(ref) == len(got), (name, k, mode)
+            for a, b in zip(ref, got):
+                assert tiles_equal(a, b), (name, k, mode, a.anchor)
+
+
+def test_color_mode_rule2_parity():
+    g = parity_suite()["plant"]
+    for use_rule2 in (True, False):
+        ref = list(tiles_mod.edge_tiles(g, 5, mode="color",
+                                        use_rule2=use_rule2))
+        got = list(pipeline.iter_tiles(g, 5, mode="color",
+                                       use_rule2=use_rule2))
+        assert len(ref) == len(got)
+        for a, b in zip(ref, got):
+            assert tiles_equal(a, b)
+
+
+@pytest.mark.parametrize("mode", ["truss", "color", "hybrid"])
+def test_packed_batches_byte_identical(mode):
+    """Streamed batches, concatenated per bin, match the reference
+    extractor + packer byte for byte."""
+    for name, g in parity_suite().items():
+        k = 5
+        binned = {}
+        for t in tiles_mod.edge_tiles(g, k, mode=mode):
+            T = next(b for b in pipeline.BINS if t.s <= b)
+            binned.setdefault(T, []).append(t)
+        ref = {T: engine_jax.pack_tiles(ts, T)
+               for T, ts in sorted(binned.items())}
+        got = {}
+        for item in pipeline.stream_batches(g, k, order=mode, batch_size=64):
+            assert isinstance(item, pipeline.TileBatch)
+            got.setdefault(item.T, []).append(item)
+        assert sorted(got) == sorted(ref), (name, mode)
+        for T in ref:
+            A = np.concatenate([b.A for b in got[T]])
+            cand = np.concatenate([b.cand for b in got[T]])
+            assert np.array_equal(A, ref[T].A), (name, mode, T)
+            assert np.array_equal(cand, ref[T].cand), (name, mode, T)
+
+
+def test_batcher_shape_and_coverage_invariants(rng):
+    g = random_graph(rng, n_lo=25, n_hi=35, p_lo=0.4, p_hi=0.7)
+    k = 4
+    n_ref = sum(1 for _ in tiles_mod.edge_tiles(g, k, mode="hybrid"))
+    seen = 0
+    for item in pipeline.stream_batches(g, k, batch_size=8):
+        assert isinstance(item, pipeline.TileBatch)
+        B, T, W = item.A.shape
+        assert B <= 8 and T in pipeline.BINS and W == T // 32
+        assert item.cand.shape == (B, W)
+        assert item.sizes.shape == (B,) and item.nedges.shape == (B,)
+        assert item.anchors.shape == (B, 2)
+        assert (item.sizes <= T).all() and (item.sizes > 0).all()
+        seen += B
+    assert seen == n_ref
+
+
+def test_plan_reuse_skips_preprocessing(rng):
+    g = random_graph(rng, n_lo=20, n_hi=30, p_lo=0.4, p_hi=0.7)
+    plan = pipeline.build_plan(g, order="hybrid")
+    table_before = plan.table("hybrid")
+    r1 = ebbkc.count(g, 4, plan=plan)
+    r2 = ebbkc.count(g, 5, plan=plan)
+    assert plan.table("hybrid") is table_before  # cached, not rebuilt
+    assert r1.count == ebbkc.count(g, 4).count
+    assert r2.count == ebbkc.count(g, 5).count
+
+
+def test_scheduler_batches_partition(rng):
+    g = random_graph(rng, n_lo=25, n_hi=35, p_lo=0.5, p_hi=0.8)
+    batches = [b for b in pipeline.stream_batches(g, 4, batch_size=4)
+               if isinstance(b, pipeline.TileBatch)]
+    assert len(batches) > 1
+    device_bins, stats = schedule_batches(batches, l=2, n_devices=3)
+    flat = sorted(i for b in device_bins for i in b)
+    # every packed batch lands in exactly one device bin
+    assert flat == list(range(len(batches)))
+    assert stats["device_loads"].shape == (3,)
+    # schedule_tiles consumes the batch's per-tile metadata directly
+    bins, st = schedule_tiles(batches[0], l=2, n_devices=2)
+    assert sorted(i for b in bins for i in b) == list(range(batches[0].B))
+
+
+def test_oversize_tiles_spill_to_host(rng):
+    g = random_graph(rng, n_lo=42, n_hi=48, p_lo=0.96, p_hi=0.99)
+    k = 4
+    items = list(pipeline.stream_batches(g, k, bins=(32,)))
+    spilled = [t for t in items if isinstance(t, tiles_mod.Tile)]
+    assert spilled, "expected tiles wider than the 32-bin"
+    ref = ebbkc.count(g, k).count
+    r = engine_jax.count(g, k, interpret=True, bins=(32,))
+    assert r.count == ref
+    assert r.stats.spilled_tiles == len(spilled)
+    # without a spill list the compatibility binner keeps the old behavior
+    with pytest.raises(ValueError):
+        engine_jax.bin_tiles(g, k, bins=(32,))
+    spill = []
+    binned = engine_jax.bin_tiles(g, k, spill=spill, bins=(32,))
+    assert len(spill) == len(spilled)
+    assert sum(p.A.shape[0] for p in binned.values()) + len(spill) \
+        == sum(1 for _ in tiles_mod.edge_tiles(g, k, mode="hybrid"))
+
+
+def test_list_cliques_max_out_exact(rng):
+    g = random_graph(rng, n_lo=16, n_hi=20, p_lo=0.6, p_hi=0.9)
+    k = 4
+    full, _ = ebbkc.list_cliques(g, k)
+    assert len(full) > 7
+    for cap in (0, 1, 3, 7, len(full), len(full) + 5):
+        got, _ = ebbkc.list_cliques(g, k, max_out=cap)
+        assert got.shape == (min(cap, len(full)), k)
+        as_set = {tuple(r) for r in full.tolist()}
+        assert all(tuple(r) in as_set for r in got.tolist())
