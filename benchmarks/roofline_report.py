@@ -36,7 +36,7 @@ def table(mesh: str, out="artifacts/dryrun"):
     for r in load(mesh, out):
         name = f"| {r['arch']} | {r['shape']} "
         if r["status"] == "skipped":
-            rows.append(name + f"| -- | -- | -- | skipped | -- | -- | "
+            rows.append(name + "| -- | -- | -- | skipped | -- | -- | "
                         f"{r['reason'][:60]}... |")
             continue
         if r["status"] != "ok":

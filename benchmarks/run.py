@@ -7,9 +7,20 @@ figures.  The device-engine roofline projection uses the TPU v5e model of
 EXPERIMENTS.md.
 
     PYTHONPATH=src python -m benchmarks.run [bench_name ...]
+
+Multi-device dispatch sweep (front-end-to-finish wall clock per device
+count, parity-checked -- exits non-zero if any device count disagrees):
+
+    PYTHONPATH=src python -m benchmarks.run --devices 1,4 \\
+        --graph rmat:12 --k 5 --json BENCH.json
+
+The sweep forges virtual CPU devices itself when XLA_FLAGS is unset.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 
 import numpy as np
@@ -243,6 +254,73 @@ def bench_pipeline_stages():
 
 
 # ---------------------------------------------------------------------------
+# Multi-device dispatch: front-end-to-finish sweep over device counts
+# ---------------------------------------------------------------------------
+
+def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
+                   out_json=None):
+    """Sweep `engine_jax.count(devices=n)` over device counts.
+
+    Times front-end-to-finish (extract + pack + device + combine, plan
+    prebuilt) per device count with double-buffered staging, emits the
+    speedup vs the 1-device baseline, and verifies every device count
+    produces the identical clique count -- any mismatch exits non-zero
+    (the CI bench-smoke gate).
+    """
+    import jax
+    from repro.core import engine_jax, pipeline
+    from repro.launch.clique import load_graph
+    from repro.runtime.dispatch import resolve_devices
+
+    counts = sorted(set(device_counts or {1, jax.device_count()}))
+    if counts[0] != 1:
+        counts = [1] + counts
+    g = load_graph(graph_spec)
+    # CSV-safe name: er:400,0.06 -> er400-0.06
+    gname = graph_spec.replace(":", "").replace(",", "-")
+    plan = pipeline.build_plan(g, order="hybrid")
+    records = []
+    mismatches = []
+    for k in ks:
+        base_t = None
+        ref_count = None
+        for n in counts:
+            used = len(resolve_devices(n))
+            r, t = timed(engine_jax.count, g, k, plan=plan, devices=n,
+                         interpret=True, repeat=2)
+            if base_t is None:
+                base_t = t
+            if ref_count is None:
+                ref_count = r.count
+            elif r.count != ref_count:
+                mismatches.append((k, n, r.count, ref_count))
+            speedup = base_t / max(t, 1e-9)
+            emit(f"dispatch/{gname}/k{k}/dev{n}", t,
+                 f"count={r.count};tiles={r.tiles};devices_used={used};"
+                 f"overlap_s={r.stats.staging_overlap_s:.3f};"
+                 f"speedup_vs_dev1={speedup:.2f}")
+            records.append({
+                "graph": graph_spec, "k": k, "devices": n,
+                "devices_used": used, "seconds": t, "count": r.count,
+                "tiles": r.tiles, "spilled": r.stats.spilled_tiles,
+                "staging_overlap_s": r.stats.staging_overlap_s,
+                "speedup_vs_dev1": speedup,
+            })
+    if out_json:
+        payload = {"graph": graph_spec, "ks": list(ks),
+                   "device_counts": counts,
+                   "parity": not mismatches, "records": records}
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {out_json}", file=sys.stderr)
+    if mismatches:
+        for k, n, got, want in mismatches:
+            print(f"PARITY FAILURE k={k} devices={n}: {got} != {want}",
+                  file=sys.stderr)
+        raise SystemExit(1)
+
+
+# ---------------------------------------------------------------------------
 # Fig 11: space costs of the engine structures
 # ---------------------------------------------------------------------------
 
@@ -311,13 +389,37 @@ ALL = [
     bench_dataset_stats, bench_kclique_runtime, bench_ablation,
     bench_ordering_time, bench_edge_orderings, bench_rule2, bench_et_t,
     bench_parallel, bench_pipeline_stages, bench_space, bench_scalability,
-    bench_device_engine,
+    bench_device_engine, bench_dispatch,
 ]
 
 
 def main() -> None:
-    wanted = set(sys.argv[1:])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*",
+                    help="bench function names to run (default: all)")
+    ap.add_argument("--devices", default=None,
+                    help="comma list of device counts, e.g. 1,4: run the "
+                         "multi-device dispatch sweep only")
+    ap.add_argument("--graph", default="rmat:12",
+                    help="graph spec for the dispatch sweep")
+    ap.add_argument("--k", default="5",
+                    help="comma list of clique sizes for the dispatch sweep")
+    ap.add_argument("--json", default=None,
+                    help="write dispatch-sweep records to this JSON file")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.devices:
+        counts = [int(x) for x in args.devices.split(",")]
+        # XLA_FLAGS must be in the environment before the backend
+        # initializes; forge enough virtual CPU devices for the sweep
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={max(counts)}")
+        ks = tuple(int(x) for x in args.k.split(","))
+        bench_dispatch(graph_spec=args.graph, ks=ks, device_counts=counts,
+                       out_json=args.json)
+        return
+    wanted = set(args.benches)
     for fn in ALL:
         if wanted and fn.__name__ not in wanted:
             continue

@@ -6,12 +6,16 @@ end-to-end application is a distributed clique-analytics service):
      k-independent tile membership table (repro.core.pipeline.PipelinePlan);
   3. answer several k-clique queries per snapshot off the same plan --
      repeated queries skip preprocessing entirely (the serving win);
-  4. stream capacity-batched packed tiles, LPT cost-balance the batches
-     across devices (EP scheme), count on the accelerator engine;
+  4. stream capacity-batched packed tiles and shard them across ALL local
+     devices (repro.runtime.dispatch: scheduler LPT bins -> real devices,
+     double-buffered host->device staging), exact host combine;
   5. serve per-snapshot clique-density reports, with checkpointed progress
      so a killed service resumes at the next snapshot.
 
     PYTHONPATH=src python examples/clique_service.py --snapshots 3 --k 5
+    # multi-device serving on a CPU host:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/clique_service.py --snapshots 3
 """
 import argparse
 import time
@@ -22,7 +26,6 @@ import jax.numpy as jnp
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.core import engine_jax, pipeline
 from repro.data import powerlaw_graph, rmat_graph
-from repro.runtime.clique_scheduler import schedule_batches
 
 
 def snapshot(i: int):
@@ -31,29 +34,13 @@ def snapshot(i: int):
     return f"powerlaw-{i}", powerlaw_graph(2500, 10, seed=100 + i)
 
 
-def answer_query(plan, k):
-    """One k-clique query off a prebuilt plan; returns (count, n_tiles,
-    n_spilled, batch balance)."""
-    l = k - 2
-    batches, spilled = [], []
-    for item in pipeline.stream_batches(plan, k):
-        (batches if isinstance(item, pipeline.TileBatch)
-         else spilled).append(item)
-    device_bins, sched = schedule_batches(batches, l, jax.device_count())
-    total = 0
-    stats = engine_jax.Stats()
-    for bin_ids in device_bins:
-        for bi in bin_ids:
-            b = batches[bi]
-            hard, nv, t, f = engine_jax.count_packed(
-                jnp.asarray(b.A), jnp.asarray(b.cand), l,
-                et=True, interpret=True)
-            total += engine_jax.combine_counts(hard, nv, t, f, l, True)
-    for tile in spilled:
-        total += engine_jax.count_spilled(tile, "hybrid", l, stats,
-                                          et_t=3, use_rule2=True)
-    n_tiles = sum(b.B for b in batches) + len(spilled)
-    return total, n_tiles, len(spilled), sched["max_over_mean"]
+def answer_query(plan, k, devices="all"):
+    """One k-clique query off a prebuilt plan, dispatched across all local
+    devices; returns (count, n_tiles, n_spilled, staging overlap s)."""
+    r = engine_jax.count(plan.g, k, plan=plan, devices=devices,
+                         interpret=True)
+    return r.count, r.tiles, r.stats.spilled_tiles, \
+        r.stats.staging_overlap_s
 
 
 def main():
@@ -77,15 +64,16 @@ def main():
         report = {}
         for k in (args.k, args.k + 1):      # two queries, one plan
             t0 = time.time()
-            total, n_tiles, n_spill, bal = answer_query(plan, k)
-            report[k] = (total, n_tiles, n_spill, bal, time.time() - t0)
+            total, n_tiles, n_spill, overlap = answer_query(plan, k)
+            report[k] = (total, n_tiles, n_spill, overlap, time.time() - t0)
         tau = plan.td.tau
         line = " ".join(
-            f"k={k}:{c} ({c / max(g.n, 1):.2f}/vertex, {dt:.2f}s)"
-            for k, (c, _, _, _, dt) in report.items())
+            f"k={k}:{c} ({c / max(g.n, 1):.2f}/vertex, {dt:.2f}s, "
+            f"overlap {ov:.2f}s)"
+            for k, (c, _, _, ov, dt) in report.items())
         n_tiles = report[args.k][1]
         print(f"[{name}] n={g.n} m={g.m} tau={tau} tiles={n_tiles} "
-              f"plan={t_plan:.2f}s -> {line}")
+              f"devices={jax.device_count()} plan={t_plan:.2f}s -> {line}")
         save_checkpoint(args.ckpt, i + 1,
                         {"done": jnp.int32(i + 1)},
                         metadata={"snapshot": name,

@@ -2,10 +2,9 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core import ebbkc, vbbkc
-from repro.core.graph import degeneracy_order, from_edges
+from repro.core.graph import degeneracy_order
 from repro.core.truss import truss_decomposition
 from repro.data import planted_cliques
 

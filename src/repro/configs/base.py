@@ -4,7 +4,7 @@ input-shape cells."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)

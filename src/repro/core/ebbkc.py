@@ -16,8 +16,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .engine_np import (Stats, count_rec_C, count_rec_T, count_rec_V,
-                        list_rec_C)
+from .engine_np import Stats, count_rec_C, count_rec_T, list_rec_C
 from .graph import Graph
 from . import pipeline
 
@@ -78,9 +77,10 @@ def list_cliques(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     """
     stats = Stats()
     if k == 1:
-        return np.arange(g.n, dtype=np.int64)[:, None], stats
+        out = np.arange(g.n, dtype=np.int64)[:, None]
+        return out[:max_out], stats
     if k == 2:
-        return g.edges.copy(), stats
+        return g.edges[:max_out].copy(), stats
     out_all: List[Tuple[int, ...]] = []
     for tile in pipeline.iter_tiles(plan or g, k, mode=order):
         cand = (1 << tile.s) - 1

@@ -174,8 +174,16 @@ def combine_counts(hard, nv, t, f, l: int, et: bool) -> int:
 
 def count_spilled(tile: tiles_mod.Tile, order: str, l: int, stats: Stats,
                   et_t: int, use_rule2: bool) -> int:
-    """Host bitset recursion for one oversize tile (mirrors the host path)."""
+    """Host bitset recursion for one oversize tile (mirrors the host path).
+
+    Each spill is recorded once: ``spilled_tiles`` counts it and
+    ``spill_sizes`` keeps its width, so host-recursion work stays
+    attributable (and schedulable) separately from the device batches --
+    the subtree's branch stats accumulate into the same ``stats`` but the
+    spill itself is never double-counted across devices.
+    """
     stats.spilled_tiles += 1
+    stats.spill_sizes.append(tile.s)
     cand = (1 << tile.s) - 1
     if order == "truss":
         return count_rec_T(tile.edges_ranked, cand, tile.s, l, stats,
@@ -189,14 +197,23 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
           interpret: Optional[bool] = None, et_route: bool = True,
           plan: Optional[pipeline.PipelinePlan] = None,
           batch_size: int = 256, bins: Sequence[int] = _BINS,
-          stage_times: Optional[Dict[str, float]] = None):
+          stage_times: Optional[Dict[str, float]] = None,
+          devices=None, async_staging: bool = True):
     """Full-graph k-clique count on the accelerator engine.
 
     Streams capacity-batched packed tiles from :mod:`repro.core.pipeline`;
     pass a prebuilt ``plan`` to amortize preprocessing across queries.
-    Oversize tiles are counted on the host (``stats.spilled_tiles``).
-    ``stage_times`` (optional dict) accumulates extract/pack/device/combine
-    wall-clock seconds.
+    Oversize tiles are counted on the host (``stats.spilled_tiles`` /
+    ``stats.spill_sizes``).  ``stage_times`` (optional dict) accumulates
+    extract/pack/device/combine wall-clock seconds.
+
+    ``devices`` routes the packed batches through the multi-device
+    dispatcher (:mod:`repro.runtime.dispatch`): an int n / ``"all"`` / a
+    device list shards batches across those devices with per-device jit
+    and double-buffered host->device staging (``async_staging=False``
+    forces synchronous staging).  ``devices=None`` keeps the single-device
+    inline path.  Counts are identical either way -- device partials are
+    combined exactly on the host.
     """
     from .ebbkc import Result
     stats = Stats()
@@ -209,6 +226,12 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     max_tile = 0
     l = k - 2
     et = et_route and et_t >= 2
+    disp = None
+    if devices is not None:
+        from ..runtime.dispatch import Dispatcher
+        disp = Dispatcher(l, devices, et=et, method=method,
+                          interpret=interpret, async_staging=async_staging,
+                          stats=stats, stage_times=stage_times)
     for item in pipeline.stream_batches(plan or g, k, order=order,
                                         use_rule2=use_rule2,
                                         batch_size=batch_size, bins=bins,
@@ -220,6 +243,9 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
             continue
         ntiles += item.B
         max_tile = max(max_tile, item.T)
+        if disp is not None:
+            disp.submit(item)
+            continue
         t0 = time.perf_counter()
         hard, nv, t, f = count_packed(
             jnp.asarray(item.A), jnp.asarray(item.cand), l,
@@ -233,4 +259,6 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
             stage_times["device"] = stage_times.get("device", 0.) + t1 - t0
             stage_times["combine"] = stage_times.get("combine", 0.) \
                 + time.perf_counter() - t1
+    if disp is not None:
+        total += disp.finish()
     return Result(total, stats, ntiles, max_tile)

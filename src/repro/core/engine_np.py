@@ -20,7 +20,7 @@ All support early termination into ``repro.core.plex``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .bitops import bits, mask_gt, popcount
 from . import plex
@@ -34,6 +34,18 @@ class Stats:
     pruned_color: int = 0    # pruned by Rules (1)/(2)
     peak_graph: int = 0      # largest branch graph seen (roofline proxy)
     spilled_tiles: int = 0   # oversize tiles routed device -> host recursion
+    # sizes of the spilled tiles (one entry per spill; host-recursion cost
+    # is attributable to these, separate from the device batches)
+    spill_sizes: List[int] = dataclasses.field(default_factory=list)
+    # multi-device dispatch accounting (repro.runtime.dispatch): device
+    # ordinal -> tiles counted there / MXU-equivalent flops staged there
+    device_tiles: Dict[int, int] = dataclasses.field(default_factory=dict)
+    device_flops: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # wall seconds the host spent NOT blocked while device work was in
+    # flight -- an upper bound on the device time hidden by double-buffered
+    # staging (the device may finish before the host returns for it);
+    # 0.0 under synchronous staging
+    staging_overlap_s: float = 0.0
 
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:

@@ -60,6 +60,21 @@ class Graph:
         return np.searchsorted(self.edge_keys(), keys)
 
 
+def ragged_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(owner, position-within-segment) index arrays for ragged segments.
+
+    The bulk-CSR-expansion idiom shared by the tile pipeline and
+    truss.edge_supports: one np.repeat/cumsum pass replaces a Python loop
+    over segments.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    owner = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
+    seg = np.repeat(np.cumsum(counts) - counts, counts)
+    pos = np.arange(total, dtype=np.int64) - seg
+    return owner, pos
+
+
 def from_edges(n: int, edges: Iterable[Tuple[int, int]] | np.ndarray) -> Graph:
     e = np.asarray(list(edges) if not isinstance(edges, np.ndarray) else edges,
                    dtype=np.int64).reshape(-1, 2)

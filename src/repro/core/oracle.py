@@ -4,7 +4,6 @@ from __future__ import annotations
 from itertools import combinations
 from typing import List, Tuple
 
-import numpy as np
 
 from .graph import Graph
 

@@ -38,7 +38,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .graph import Graph, greedy_coloring, color_vertex_order
+from .graph import Graph, greedy_coloring, color_vertex_order, ragged_expand
 from .tiles import Tile
 from .truss import TrussDecomposition, truss_decomposition
 
@@ -61,14 +61,36 @@ def _pack_bits(dense: np.ndarray) -> np.ndarray:
     return np.ascontiguousarray(packed).view(np.uint32)
 
 
-def _ragged_expand(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """(owner, position-within-segment) index arrays for ragged segments."""
-    counts = np.asarray(counts, dtype=np.int64)
-    total = int(counts.sum())
-    owner = np.repeat(np.arange(counts.size, dtype=np.int64), counts)
-    seg = np.repeat(np.cumsum(counts) - counts, counts)
-    pos = np.arange(total, dtype=np.int64) - seg
-    return owner, pos
+def _edge_lookup(ekeys: np.ndarray, m: int, n: int, lo: np.ndarray,
+                 hi: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Membership probe for canonical pairs (lo < hi) against the sorted
+    edge keys ``u * n + v``.
+
+    Returns (hit mask, position in the sorted key array) -- position is
+    only meaningful where ``hit``; callers needing the edge id (e.g. for a
+    pi_tau rank lookup) index with it.  This is the single home of the
+    searchsorted/clip/equality idiom; keep the key encoding in sync with
+    :meth:`repro.core.graph.Graph.edge_keys`.
+    """
+    keys = lo * np.int64(n) + hi
+    p = np.searchsorted(ekeys, keys)
+    p = np.clip(p, 0, max(m - 1, 0))
+    hit = (ekeys[p] == keys) if m else np.zeros(0, dtype=bool)
+    return hit, p
+
+
+def _group_offsets(E: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Segment boundaries of a value-sorted owner array.
+
+    Returns (offsets (nt+1,), first index of each segment) -- the ragged
+    tile layout shared by both membership-table builders.
+    """
+    if E.size:
+        starts = np.concatenate(
+            [[0], np.nonzero(np.diff(E) != 0)[0] + 1]).astype(np.int64)
+        offsets = np.concatenate([starts, [E.size]]).astype(np.int64)
+        return offsets, starts
+    return np.zeros(1, dtype=np.int64), np.zeros(0, dtype=np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -130,30 +152,20 @@ def _build_truss_table(g: Graph, td: TrussDecomposition) -> TileTable:
     src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
     rank_csr = td.rank[g.edge_ids(src, g.indices)]
     r_e = td.rank
-    owner, pos = _ragged_expand(deg[a])
+    owner, pos = ragged_expand(deg[a])
     idx = g.indptr[a][owner] + pos
     w = g.indices[idx]
     keep = (rank_csr[idx] > r_e[owner]) & (w != b[owner])
     owner, w = owner[keep], w[keep]
     bb = b[owner]
-    lo = np.minimum(bb, w)
-    hi = np.maximum(bb, w)
-    keys = lo * np.int64(g.n) + hi
-    p = np.searchsorted(ek, keys)
-    p = np.clip(p, 0, m - 1)
-    hit = (ek[p] == keys) & (td.rank[p] > r_e[owner])
+    hit, p = _edge_lookup(ek, m, g.n, np.minimum(bb, w), np.maximum(bb, w))
+    hit &= td.rank[p] > r_e[owner]
     E, W = owner[hit], w[hit]
     # canonical order: reverse pi_tau over tiles, ascending vertex id inside
     order = np.lexsort((W, -r_e[E]))
     E, W = E[order], W[order]
-    if E.size:
-        starts = np.concatenate(
-            [[0], np.nonzero(np.diff(E) != 0)[0] + 1]).astype(np.int64)
-        offsets = np.concatenate([starts, [E.size]]).astype(np.int64)
-        tile_edge = E[starts]
-    else:
-        offsets = np.zeros(1, dtype=np.int64)
-        tile_edge = np.zeros(0, dtype=np.int64)
+    offsets, starts = _group_offsets(E)
+    tile_edge = E[starts]
     return TileTable("truss", tile_edge, g.edges[tile_edge],
                      offsets, W, r_e[tile_edge], ek, td.rank)
 
@@ -177,35 +189,24 @@ def _build_color_table(g: Graph, colors: np.ndarray) -> TileTable:
     deg = np.diff(g.indptr)
     a = np.where(deg[ulo] <= deg[vhi], ulo, vhi)
     b = np.where(deg[ulo] <= deg[vhi], vhi, ulo)
-    owner, pos = _ragged_expand(deg[a])
+    owner, pos = ragged_expand(deg[a])
     idx = g.indptr[a][owner] + pos
     w = g.indices[idx]
     # member iff vid[w] beyond both endpoints (DAG out-neighbor of each)
     keep = (vid[w] > vid[vhi][owner]) & (w != b[owner])
     owner, w = owner[keep], w[keep]
     bb = b[owner]
-    lo = np.minimum(bb, w)
-    hi = np.maximum(bb, w)
-    keys = lo * np.int64(g.n) + hi
-    p = np.searchsorted(ek, keys)
-    p = np.clip(p, 0, m - 1)
-    hit = ek[p] == keys
+    hit, _ = _edge_lookup(ek, m, g.n, np.minimum(bb, w), np.maximum(bb, w))
     E, W = owner[hit], w[hit]
     # canonical order: edge id ascending, members by color-DAG position
     order = np.lexsort((vid[W], E))
     E, W = E[order], W[order]
-    if E.size:
-        starts = np.concatenate(
-            [[0], np.nonzero(np.diff(E) != 0)[0] + 1]).astype(np.int64)
-        offsets = np.concatenate([starts, [E.size]]).astype(np.int64)
-        tile_edge = E[starts]
-    else:
-        offsets = np.zeros(1, dtype=np.int64)
-        tile_edge = np.zeros(0, dtype=np.int64)
+    offsets, starts = _group_offsets(E)
+    tile_edge = E[starts]
     mcol = colors[W]
     nt = tile_edge.size
     sizes = np.diff(offsets)
-    tid_rep, _ = _ragged_expand(sizes)
+    tid_rep, _ = ragged_expand(sizes)
     if E.size:
         o2 = np.lexsort((mcol, tid_rep))
         c2, t2 = mcol[o2], tid_rep[o2]
@@ -291,7 +292,7 @@ def _chunk_dense(g: Graph, table: TileTable, ids: np.ndarray, T: int):
     ids = np.asarray(ids, dtype=np.int64)
     B = ids.size
     sz = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)
-    owner, pos = _ragged_expand(sz)
+    owner, pos = ragged_expand(sz)
     V = np.zeros((B, T), dtype=np.int64)
     V[owner, pos] = table.verts[table.offsets[ids][owner] + pos]
     D = np.zeros((B, T, T), dtype=bool)
@@ -309,7 +310,7 @@ def _chunk_dense(g: Graph, table: TileTable, ids: np.ndarray, T: int):
         stop = max(start + 1, min(stop, B))
         sl = slice(start, stop)
         so = sz[sl]
-        powner, ppos = _ragged_expand(so * so)
+        powner, ppos = ragged_expand(so * so)
         s_rep = so[powner]
         i = ppos // s_rep
         j = ppos % s_rep
@@ -318,12 +319,8 @@ def _chunk_dense(g: Graph, table: TileTable, ids: np.ndarray, T: int):
         powner_g = powner + start
         gu = V[powner_g, i]
         gv = V[powner_g, j]
-        lo = np.minimum(gu, gv)
-        hi = np.maximum(gu, gv)
-        keys = lo * np.int64(g.n) + hi
-        p = np.searchsorted(table.ekeys, keys)
-        p = np.clip(p, 0, max(g.m - 1, 0))
-        hit = (table.ekeys[p] == keys) if g.m else np.zeros(0, bool)
+        hit, p = _edge_lookup(table.ekeys, g.m, g.n,
+                              np.minimum(gu, gv), np.maximum(gu, gv))
         if table.family == "truss":
             hit &= table.erank[p] > table.thresh[ids[powner_g]]
         powner_g, i, j, p = powner_g[hit], i[hit], j[hit], p[hit]
@@ -426,7 +423,7 @@ def _tiles_from_ids(g: Graph, table: TileTable, ids: np.ndarray,
             colors, perm = _greedy_color_chunk(D, sz)
             D, V, colors_out = _relabel_chunk(D, V, colors, perm)
         elif mode == "color":
-            mowner, mpos = _ragged_expand(sz)
+            mowner, mpos = ragged_expand(sz)
             colors_out = np.zeros((sub.size, T), dtype=np.int64)
             colors_out[mowner, mpos] = table.member_colors[
                 table.offsets[sub][mowner] + mpos]

@@ -14,7 +14,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, ragged_expand
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,10 +41,8 @@ def edge_supports(g: Graph) -> np.ndarray:
     a = np.where(deg[u] <= deg[v], u, v)
     b = np.where(deg[u] <= deg[v], v, u)
     counts = deg[a]
-    owner = np.repeat(np.arange(g.m, dtype=np.int64), counts)
-    seg = np.repeat(np.cumsum(counts) - counts, counts)
-    idx = g.indptr[a][owner] + (np.arange(int(counts.sum()),
-                                          dtype=np.int64) - seg)
+    owner, pos = ragged_expand(counts)
+    idx = g.indptr[a][owner] + pos
     w = g.indices[idx]
     hit = g.has_edges(b[owner], w)
     return np.bincount(owner[hit], minlength=g.m).astype(np.int64)

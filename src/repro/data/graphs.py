@@ -8,7 +8,7 @@ approach tau ~ delta (the dense DB/CI/WE family).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -8,7 +8,7 @@ tier of the system); deterministic per (seed, step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

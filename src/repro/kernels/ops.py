@@ -9,7 +9,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import clique_count as _cc
 from . import intersect as _is

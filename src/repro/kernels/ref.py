@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .common import gt_masks_np, num_words, popcount, unpack_bits
+from .common import gt_masks_np, popcount, unpack_bits
 
 
 def edges_within_ref(A: jax.Array, cand: jax.Array) -> jax.Array:

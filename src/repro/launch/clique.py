@@ -1,30 +1,30 @@
 """Distributed k-clique counting driver (the paper's operator as a service).
 
-``python -m repro.launch.clique --graph rmat:14 --k 5``
+``python -m repro.launch.clique --graph rmat:14 --k 5 --devices all``
 
 Pipeline: host preprocessing (truss order cached in a PipelinePlan) ->
 vectorized extraction + capacity-batched packing (repro.core.pipeline) ->
-LPT cost-balanced batch scheduling (Section 6.2(7) EdgeParallel; device
-bins map one-to-one onto packed batches) -> device kernels -> psum.
-Oversize tiles spill to the host recursion instead of aborting.
-On this CPU container it runs on however many host devices exist; the
-512-way layout is exercised by dryrun.py.
+LPT cost-balanced batch scheduling (Section 6.2(7) EdgeParallel; scheduler
+bins map one-to-one onto real local devices, repro.runtime.dispatch) ->
+per-device jit kernels with double-buffered host->device staging -> exact
+host combine.  Oversize tiles spill to the host recursion instead of
+aborting.  On this CPU container it runs on however many host devices
+exist (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` forges N);
+the 512-way layout is exercised by dryrun.py.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-
 from ..core import ebbkc, engine_jax, pipeline
 from ..core import tiles as tiles_mod
 from ..core.engine_np import Stats
 from ..core.graph import Graph
 from ..data import graphs as gdata
-from ..runtime.clique_scheduler import schedule_batches
+from ..launch.mesh import make_local_mesh
+from ..runtime.dispatch import (Dispatcher, dispatch_scheduled,
+                                resolve_devices)
 
 
 def load_graph(desc: str) -> Graph:
@@ -41,12 +41,30 @@ def load_graph(desc: str) -> Graph:
     raise ValueError(f"unknown graph spec {desc}")
 
 
+def parse_devices(spec: str):
+    """CLI device spec: "all" or an int count (graceful clamp)."""
+    return "all" if spec == "all" else int(spec)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="rmat:12")
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--order", default="hybrid")
     ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--devices", default="all",
+                    help='"all" or device count (clamped to available)')
+    ap.add_argument("--shard-map", action="store_true",
+                    help="shard each batch over a device mesh instead of "
+                         "LPT-placing whole batches on devices")
+    ap.add_argument("--offline-lpt", action="store_true",
+                    help="materialize all batches, then map schedule_batches"
+                         " LPT bins one-to-one onto devices (prints balance;"
+                         " default is streaming online-LPT dispatch, which"
+                         " overlaps packing with device execution and keeps"
+                         " host memory bounded)")
+    ap.add_argument("--sync-staging", action="store_true",
+                    help="disable double-buffered host->device staging")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
     args = ap.parse_args()
@@ -54,46 +72,74 @@ def main():
     g = load_graph(args.graph)
     print(f"graph: n={g.n} m={g.m}")
     l = args.k - 2
-    n_dev = jax.device_count()
+    devices = resolve_devices(parse_devices(args.devices))
+    n_dev = len(devices)
+    mesh = None
+    if args.shard_map:
+        mesh = make_local_mesh((n_dev, 1), axes=("data", "model"))
 
     t0 = time.time()
     plan = pipeline.build_plan(g, order=args.order)
     t_plan = time.time() - t0
 
-    # stream packed batches off the pipeline; spill oversize tiles to host
-    t0 = time.time()
-    batches = []
-    spilled = []
-    for item in pipeline.stream_batches(plan, args.k, order=args.order,
-                                        batch_size=args.batch_size):
-        (spilled if isinstance(item, tiles_mod.Tile) else batches).append(item)
-    t_pack = time.time() - t0
-
-    # each packed batch is one dispatch unit; LPT-balance them over devices
-    device_bins, sched = schedule_batches(batches, l, n_dev)
-
-    t0 = time.time()
-    total = 0
     stats = Stats()
-    for d, bin_ids in enumerate(device_bins):
-        for bi in bin_ids:
-            b = batches[bi]
-            hard, nv, t, f = engine_jax.count_packed(
-                jnp.asarray(b.A), jnp.asarray(b.cand), l,
-                et=True, interpret=True)
-            total += engine_jax.combine_counts(hard, nv, t, f, l, et=True)
-    for tile in spilled:
-        total += engine_jax.count_spilled(tile, args.order, l, stats,
-                                          et_t=3, use_rule2=True)
+    stage = {}
+    stream = pipeline.stream_batches(plan, args.k, order=args.order,
+                                     batch_size=args.batch_size,
+                                     timings=stage)
+    t0 = time.time()
+    info = {}
+    n_batches = 0
+    n_tiles = 0
+    if args.offline_lpt:
+        # materialize, then scheduler bins become real devices
+        batches = []
+        total = 0
+        for item in stream:
+            if isinstance(item, tiles_mod.Tile):
+                n_tiles += 1
+                total += engine_jax.count_spilled(item, args.order, l, stats,
+                                                  et_t=3, use_rule2=True)
+            else:
+                batches.append(item)
+                n_tiles += item.B
+        n_batches = len(batches)
+        got, info = dispatch_scheduled(
+            batches, l, devices, mesh=mesh,
+            async_staging=not args.sync_staging, stats=stats)
+        total += got
+    else:
+        # streaming: pack(i+1) on the host overlaps kernel(i) on devices
+        disp = Dispatcher(l, devices, mesh=mesh,
+                          async_staging=not args.sync_staging, stats=stats)
+        total = 0
+        for item in stream:
+            if isinstance(item, tiles_mod.Tile):
+                n_tiles += 1
+                total += engine_jax.count_spilled(item, args.order, l, stats,
+                                                  et_t=3, use_rule2=True)
+            else:
+                n_batches += 1
+                n_tiles += item.B
+                disp.submit(item)
+        total += disp.finish()
     t_count = time.time() - t0
+    # packing is interleaved with counting; stream_batches bills it apart
+    t_pack = stage.get("extract", 0.0) + stage.get("pack", 0.0)
 
-    n_tiles = sum(b.B for b in batches) + len(spilled)
-    print(f"batches={len(batches)} tiles={n_tiles} "
-          f"spilled={stats.spilled_tiles} devices={n_dev} "
-          f"balance max/mean={sched['max_over_mean']:.3f}")
+    balance = info.get("max_over_mean")
+    bal_txt = f" balance max/mean={balance:.3f}" if balance else ""
+    print(f"batches={n_batches} tiles={n_tiles} "
+          f"spilled={stats.spilled_tiles} devices={n_dev}"
+          f"{' (shard_map)' if mesh is not None else ''}{bal_txt}")
+    per_dev = " ".join(
+        f"d{d}:{stats.device_tiles[d]}t/{stats.device_flops[d] / 1e6:.0f}MF"
+        for d in sorted(stats.device_tiles))
+    print(f"device tiles/flops: {per_dev or '-'} "
+          f"staging_overlap={stats.staging_overlap_s:.2f}s")
     print(f"k={args.k}: {total} cliques "
-          f"(plan {t_plan:.2f}s, extract+pack {t_pack:.2f}s, "
-          f"count {t_count:.2f}s)")
+          f"(plan {t_plan:.2f}s, front-to-finish {t_count:.2f}s, "
+          f"of which extract+pack {t_pack:.2f}s)")
     if args.verify:
         ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
         print(f"host engine: {ref}  match={ref == total}")

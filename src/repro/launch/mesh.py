@@ -16,7 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     if len(devices) < n:
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, have {len(devices)} "
-            f"(dryrun.py sets xla_force_host_platform_device_count)")
+            "(dryrun.py sets xla_force_host_platform_device_count)")
     return jax.sharding.Mesh(
         np.asarray(devices[:n]).reshape(shape), axes)
 

@@ -7,7 +7,6 @@ import dataclasses
 import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -300,7 +299,8 @@ def gnn_train_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
     if name == "gin-tu":
         cfg = dataclasses.replace(base, d_in=d_feat, n_classes=n_classes,
                                   graph_level=False)
-        init = lambda k: gnn_mod.init_gin(k, cfg)
+        def init(k):
+            return gnn_mod.init_gin(k, cfg)
 
         def loss_of(params, batch):
             logits = gnn_mod.gin_forward(params, batch["nodes"],
@@ -323,7 +323,8 @@ def gnn_train_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
         cfg = dataclasses.replace(base, d_node_in=d_feat, d_edge_in=d_edge,
                                   d_out=n_classes,
                                   scan_layers=not reduced)
-        init = lambda k: gnn_mod.init_mgn(k, cfg)
+        def init(k):
+            return gnn_mod.init_mgn(k, cfg)
 
         def loss_of(params, batch):
             out = gnn_mod.mgn_forward(params, batch["nodes"],
@@ -344,7 +345,8 @@ def gnn_train_cell(spec: ArchSpec, cell: ShapeCell, mesh: Optional[Mesh],
                  "targets": P(ALL_AXES, None)}
     elif name == "egnn":
         cfg = dataclasses.replace(base, d_in=d_feat, d_out=1)
-        init = lambda k: gnn_mod.init_egnn(k, cfg)
+        def init(k):
+            return gnn_mod.init_egnn(k, cfg)
 
         def loss_of(params, batch):
             out, _ = gnn_mod.egnn_forward(

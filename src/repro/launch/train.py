@@ -12,7 +12,7 @@ import numpy as np
 import jax
 
 from .. import configs
-from ..data import GraphBatcher, LMDataPipeline, RecsysPipeline
+from ..data import LMDataPipeline, RecsysPipeline
 from ..optim import adamw_init
 from ..runtime import TrainLoop, TrainLoopConfig
 from .steps import build_cell

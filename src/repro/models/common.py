@@ -1,8 +1,7 @@
 """Shared model building blocks (pure functional, no flax)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ Graphs arrive as fixed-shape padded batches:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ the "model" mesh axis; field f row-offset = f * vocab.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

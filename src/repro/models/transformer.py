@@ -24,10 +24,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from .common import (act_fn, apply_rope, cross_entropy_loss, dense_init,
-                     normal_init, rms_norm)
+from .common import act_fn, apply_rope, normal_init, rms_norm
 
 
 @dataclasses.dataclass(frozen=True)

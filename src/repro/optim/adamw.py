@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,8 @@ class AdamWConfig:
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),

@@ -1,4 +1,6 @@
-"""Training / serving runtime: fault-tolerant loops + clique scheduler."""
+"""Training / serving runtime: fault-tolerant loops, clique scheduler,
+multi-device tile dispatch."""
 from .train_loop import TrainLoop, TrainLoopConfig
 from .clique_scheduler import (balanced_bins, schedule_batches,
                                schedule_tiles, tile_costs)
+from .dispatch import Dispatcher, dispatch_scheduled, resolve_devices

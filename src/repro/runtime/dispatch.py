@@ -1,0 +1,355 @@
+"""Multi-device sharded dispatch for the streaming tile pipeline.
+
+DESIGN.md section 4.  The edge-oriented branching of EBBkC makes the tile
+stream embarrassingly parallel: every packed ``TileBatch`` is an independent
+fixed-shape device call, so scaling past one chip is purely a placement and
+staging problem.  This module turns the scheduler's LPT bins
+(`clique_scheduler.schedule_batches`) into *real* devices:
+
+* **Per-device dispatch** (default): each batch is committed to one local
+  device with ``jax.device_put`` and counted by a per-device ``jit`` of
+  ``engine_jax.count_packed`` (jit caches one executable per
+  (shape, device) pair).  Placement is either *online LPT* -- each arriving
+  batch goes to the least-loaded device under the scheduler cost model,
+  which needs no lookahead and so composes with streaming -- or *offline
+  LPT* via :func:`dispatch_scheduled`, which maps precomputed scheduler
+  bins one-to-one onto devices.
+* **shard_map path**: when the caller provides a mesh
+  (``launch/mesh.py``), each batch is padded to the mesh batch axes and
+  counted in a single SPMD step; outputs stay device-local and the host
+  combines them exactly.
+* **Double-buffered staging**: with ``async_staging=True`` (default) up to
+  ``max_inflight`` batches per device are left un-harvested, so the host
+  packs batch i+1 while the devices execute batch i.  The overlapped
+  seconds are accounted in ``Stats.staging_overlap_s``.
+
+Counts are exact and invariant to device count, placement, and staging
+mode: every device step returns (hard, nv, t, f) partials and the host
+reduces them in int64 (including the Section 5.1 early-termination closed
+form), so a 1-device CPU CI run is byte-identical to an N-device run.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import itertools
+import time
+from typing import Deque, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from ..core import engine_jax, pipeline
+from ..core.engine_np import Stats
+from .clique_scheduler import schedule_batches, tile_costs
+
+if hasattr(jax, "shard_map"):  # newer jax
+    _shard_map = jax.shard_map
+    _SHARD_MAP_CHECK = {"check_vma": False}
+else:  # the pinned jax 0.4.37
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_CHECK = {"check_rep": False}
+
+
+def resolve_devices(
+    devices: Union[None, int, str, Sequence] = None,
+) -> List[jax.Device]:
+    """Normalize a ``devices=`` knob to a concrete local device list.
+
+    ``None`` / ``"all"`` -> every local device; an int n -> the first
+    min(n, available) devices (graceful CPU-CI fallback: asking for 4 on a
+    1-device host degrades to 1 device, never errors); a sequence of jax
+    devices is passed through.
+    """
+    avail = jax.devices()
+    if devices is None or devices == "all":
+        return list(avail)
+    if isinstance(devices, int):
+        if devices < 1:
+            raise ValueError("devices must be >= 1")
+        return list(avail[: min(devices, len(avail))])
+    devs = list(devices)
+    if not devs:
+        raise ValueError("empty device list")
+    return devs
+
+
+def batch_flops(n_tiles: int, T: int) -> int:
+    """MXU-equivalent flop model of one packed batch (dense-tile matmul)."""
+    return int(n_tiles) * 2 * int(T) ** 3
+
+
+def _mesh_batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes a tile batch shards over: every non-'model' axis of the mesh."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes if axes else tuple(mesh.axis_names[:1])
+
+
+@functools.lru_cache(maxsize=None)
+def _device_step(l: int, method: str, et: bool, interpret: Optional[bool]):
+    """Process-wide jitted ``count_packed`` step, shared by all dispatchers.
+
+    Memoized so repeated queries reuse one jit cache: jit compiles one
+    executable per (input shape, device) pair, and a fresh ``jax.jit`` per
+    dispatcher would re-trace the whole kernel on every query.
+    """
+
+    def step(A, cand):
+        return engine_jax.count_packed(
+            A, cand, l, method=method, et=et, interpret=interpret
+        )
+
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_step(
+    mesh: jax.sharding.Mesh,
+    l: int,
+    method: str = "auto",
+    et: bool = True,
+    interpret: Optional[bool] = None,
+):
+    """One jitted SPMD ``count_packed`` step over the mesh batch axes.
+
+    Outputs keep the batch sharding (no psum): the host combines the
+    per-shard partials exactly in int64, preserving the early-termination
+    closed form.
+    """
+    P = jax.sharding.PartitionSpec
+    axes = _mesh_batch_axes(mesh)
+
+    def inner(A_loc, cand_loc):
+        return engine_jax.count_packed(
+            A_loc, cand_loc, l, method=method, et=et, interpret=interpret
+        )
+
+    fn = _shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(axes, None, None), P(axes, None)),
+        out_specs=(P(axes), P(axes), P(axes), P(axes)),
+        **_SHARD_MAP_CHECK,
+    )
+    return jax.jit(fn), axes
+
+
+def _pad_rows(x: np.ndarray, multiple: int) -> np.ndarray:
+    """Zero-pad axis 0 of ``x`` up to a multiple of ``multiple``.
+
+    Padding rows have ``cand == 0`` (no candidate vertices), which
+    contributes exactly 0 to both the kernel and the closed-form count for
+    every l >= 1, so padded and unpadded batches agree.
+    """
+    pad = (-x.shape[0]) % multiple
+    if not pad:
+        return x
+    return np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One staged batch awaiting harvest (device arrays, not host data)."""
+
+    device: int  # device ordinal; -1 for the shard_map path
+    out: Tuple[jax.Array, jax.Array, jax.Array, jax.Array]
+
+
+class Dispatcher:
+    """Streams packed tile batches across the local device set.
+
+    See the module docstring for the execution model.  Typical use::
+
+        disp = Dispatcher(l, devices="all", stats=stats)
+        for item in pipeline.stream_batches(plan, k):
+            if isinstance(item, pipeline.TileBatch):
+                disp.submit(item)
+            else:
+                ...  # spill to host recursion
+        total = disp.finish()
+    """
+
+    def __init__(
+        self,
+        l: int,
+        devices: Union[None, int, str, Sequence] = None,
+        *,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        et: bool = True,
+        method: str = "auto",
+        interpret: Optional[bool] = None,
+        async_staging: bool = True,
+        max_inflight: int = 2,
+        stats: Optional[Stats] = None,
+        stage_times: Optional[dict] = None,
+    ):
+        if l < 1:
+            raise ValueError("dispatch requires l >= 1 (k >= 3)")
+        self.l = l
+        self.et = et
+        self.mesh = mesh
+        self.async_staging = async_staging
+        self.max_inflight = max(1, int(max_inflight))
+        self.stats = stats if stats is not None else Stats()
+        self.stage_times = stage_times
+        self.total = 0
+        self.tiles = 0
+        self.placements: List[int] = []
+        self._inflight: Deque[_InFlight] = collections.deque()
+        self._overlap_mark = 0.0
+        if mesh is not None:
+            self.devices = list(mesh.devices.flat)
+            self._step, axes = make_sharded_step(
+                mesh, l, method=method, et=et, interpret=interpret
+            )
+            self._n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+            ns, ps = jax.sharding.NamedSharding, jax.sharding.PartitionSpec
+            self._in_shardings = (
+                ns(mesh, ps(axes, None, None)),
+                ns(mesh, ps(axes, None)),
+            )
+        else:
+            self.devices = resolve_devices(devices)
+            self._n_shards = 1
+            self._in_shardings = None
+            self._step = _device_step(l, method, et, interpret)
+        self._loads = np.zeros(len(self.devices))
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def _account(self, per_device_tiles: np.ndarray, T: int) -> None:
+        tiles, flops = self.stats.device_tiles, self.stats.device_flops
+        for d, c in enumerate(per_device_tiles):
+            if not c:
+                continue
+            tiles[d] = tiles.get(d, 0) + int(c)
+            flops[d] = flops.get(d, 0) + batch_flops(int(c), T)
+
+    def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
+        """Stage one packed batch and launch its device step (non-blocking).
+
+        ``device`` forces a placement (offline scheduling); otherwise the
+        batch goes to the least-loaded device under the scheduler cost
+        model (online LPT).
+        """
+        if self.mesh is not None:
+            d = -1
+            A = _pad_rows(batch.A, self._n_shards)
+            cand = _pad_rows(batch.cand, self._n_shards)
+            A, cand = jax.device_put((A, cand), self._in_shardings)
+            shard_rows = A.shape[0] // self._n_shards
+            per_dev = np.bincount(
+                np.minimum(np.arange(batch.B) // shard_rows, self._n_shards - 1),
+                minlength=self._n_shards,
+            )
+        else:
+            d = int(np.argmin(self._loads)) if device is None else int(device)
+            cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
+            self._loads[d] += cost
+            A = jax.device_put(batch.A, self.devices[d])
+            cand = jax.device_put(batch.cand, self.devices[d])
+            per_dev = np.zeros(self.n_devices, dtype=np.int64)
+            per_dev[d] = batch.B
+        out = self._step(A, cand)
+        self.placements.append(d)
+        self.tiles += batch.B
+        self._account(per_dev, batch.T)
+        if not self._inflight:
+            # in-flight window (re)opens now; overlap accrues from here
+            self._overlap_mark = time.perf_counter()
+        self._inflight.append(_InFlight(d, out))
+        if not self.async_staging:
+            self._drain()
+        else:
+            while len(self._inflight) > self.max_inflight * self.n_devices:
+                self._harvest_one()
+
+    def _harvest_one(self) -> None:
+        p = self._inflight.popleft()
+        t0 = time.perf_counter()
+        # wall time since the last accounting mark during which work was in
+        # flight and the host was free (packing / combining, not blocked):
+        # an upper bound on the device execution hidden behind host work
+        # (the device may have finished early; measuring true device busy
+        # time would need device-side profiling).  Counting whole
+        # dispatch-to-harvest residencies instead would double-count
+        # concurrent in-flight batches.  Synchronous staging hides nothing
+        # by construction.
+        if self.async_staging:
+            self.stats.staging_overlap_s += max(0.0, t0 - self._overlap_mark)
+        jax.block_until_ready(p.out)
+        t1 = time.perf_counter()
+        self._overlap_mark = t1  # blocked interval [t0, t1] is not overlap
+        self.total += engine_jax.combine_counts(*p.out, self.l, self.et)
+        t2 = time.perf_counter()
+        if self.stage_times is not None:
+            st = self.stage_times
+            st["device"] = st.get("device", 0.0) + (t1 - t0)
+            st["combine"] = st.get("combine", 0.0) + (t2 - t1)
+
+    def _drain(self) -> None:
+        while self._inflight:
+            self._harvest_one()
+
+    def finish(self) -> int:
+        """Drain all in-flight work; returns the accumulated exact count."""
+        self._drain()
+        return self.total
+
+
+def dispatch_scheduled(
+    batches: Sequence[pipeline.TileBatch],
+    l: int,
+    devices: Union[None, int, str, Sequence] = None,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    et: bool = True,
+    method: str = "auto",
+    interpret: Optional[bool] = None,
+    async_staging: bool = True,
+    max_inflight: int = 2,
+    stats: Optional[Stats] = None,
+    stage_times: Optional[dict] = None,
+) -> Tuple[int, dict]:
+    """Offline-LPT dispatch of a materialized batch list.
+
+    ``schedule_batches`` LPT-assigns whole batches to ``n_devices`` bins;
+    each bin becomes one real device, and bins are drained round-robin so
+    every device receives work from the first wave of submissions.
+    Returns (total, info) where info carries the scheduler stats plus the
+    realized per-batch ``placements``.
+    """
+    disp = Dispatcher(
+        l,
+        devices,
+        mesh=mesh,
+        et=et,
+        method=method,
+        interpret=interpret,
+        async_staging=async_staging,
+        max_inflight=max_inflight,
+        stats=stats,
+        stage_times=stage_times,
+    )
+    if mesh is not None:
+        for b in batches:
+            disp.submit(b)
+        info = {"n_devices": disp.n_devices, "mesh": True}
+    else:
+        device_bins, sched = schedule_batches(batches, l, disp.n_devices)
+        for wave in itertools.zip_longest(*device_bins):
+            for d, bi in enumerate(wave):
+                if bi is not None:
+                    disp.submit(batches[bi], device=d)
+        info = dict(sched)
+        info["n_devices"] = disp.n_devices
+        info["device_bins"] = device_bins
+    total = disp.finish()
+    info["placements"] = disp.placements
+    info["tiles"] = disp.tiles
+    return total, info

@@ -17,7 +17,7 @@ from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
-from ..checkpoint import (gc_checkpoints, latest_step, restore_checkpoint,
+from ..checkpoint import (gc_checkpoints, restore_checkpoint,
                           save_checkpoint)
 
 log = logging.getLogger("repro.train")

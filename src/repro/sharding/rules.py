@@ -108,7 +108,8 @@ def transformer_param_specs(cfg, rules: LogicalRules = LM_RULES,
     is not divisible by it (GQA with kv < TP -- standard MaxText/Megatron
     fallback); same guard for q heads.
     """
-    s = lambda *ax: spec_for(rules, ax)
+    def s(*ax):
+        return spec_for(rules, ax)
     kv_ax = "kv_heads" if cfg.n_kv_heads % max(model_size, 1) == 0 else None
     q_ax = "heads" if cfg.n_heads % max(model_size, 1) == 0 else None
     group = {
@@ -188,7 +189,8 @@ def transformer_layer_specs(cfg, model_size: int = 1):
 
 def transformer_cache_specs(cfg, rules: LogicalRules = LM_RULES,
                             model_size: int = 1):
-    s = lambda *ax: spec_for(rules, ax)
+    def s(*ax):
+        return spec_for(rules, ax)
     if cfg.n_kv_heads % max(model_size, 1) == 0:
         kv = s("layers", "batch", "cache_len", "kv_heads", "head_dim")
     else:

@@ -3,7 +3,6 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ebbkc, engine_jax
-from repro.core import graph as G
 
 from conftest import random_graph
 

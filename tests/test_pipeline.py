@@ -125,6 +125,10 @@ def test_oversize_tiles_spill_to_host(rng):
     r = engine_jax.count(g, k, interpret=True, bins=(32,))
     assert r.count == ref
     assert r.stats.spilled_tiles == len(spilled)
+    # every spill is recorded exactly once, with its width, so host-
+    # recursion work stays attributable separately from device batches
+    assert sorted(r.stats.spill_sizes) == sorted(t.s for t in spilled)
+    assert all(s > 32 for s in r.stats.spill_sizes)
     # without a spill list the compatibility binner keeps the old behavior
     with pytest.raises(ValueError):
         engine_jax.bin_tiles(g, k, bins=(32,))
@@ -133,6 +137,27 @@ def test_oversize_tiles_spill_to_host(rng):
     assert len(spill) == len(spilled)
     assert sum(p.A.shape[0] for p in binned.values()) + len(spill) \
         == sum(1 for _ in tiles_mod.edge_tiles(g, k, mode="hybrid"))
+
+
+def test_spill_interacts_with_multi_device_dispatch(rng):
+    """Spill + dispatch: oversize tiles go to the host recursion exactly
+    once while the packed remainder shards across all local devices, and
+    the combined count still matches the host oracle."""
+    import jax
+
+    g = random_graph(rng, n_lo=42, n_hi=48, p_lo=0.96, p_hi=0.99)
+    k = 4
+    ref = ebbkc.count(g, k).count
+    n_dev = jax.device_count()
+    r = engine_jax.count(g, k, interpret=True, bins=(32,), devices=n_dev)
+    assert r.count == ref
+    assert r.stats.spilled_tiles == len(r.stats.spill_sizes) > 0
+    assert all(s > 32 for s in r.stats.spill_sizes)
+    # device accounting covers exactly the non-spilled tiles
+    assert sum(r.stats.device_tiles.values()) \
+        == r.tiles - r.stats.spilled_tiles
+    # spilled work never lands in the device accounting
+    assert all(d in range(n_dev) for d in r.stats.device_tiles)
 
 
 def test_list_cliques_max_out_exact(rng):
@@ -145,3 +170,8 @@ def test_list_cliques_max_out_exact(rng):
         assert got.shape == (min(cap, len(full)), k)
         as_set = {tuple(r) for r in full.tolist()}
         assert all(tuple(r) in as_set for r in got.tolist())
+    # the k <= 2 shortcuts honor the cap too
+    got1, _ = ebbkc.list_cliques(g, 1, max_out=3)
+    assert got1.shape == (3, 1)
+    got2, _ = ebbkc.list_cliques(g, 2, max_out=3)
+    assert got2.shape == (3, 2)

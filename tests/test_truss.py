@@ -1,9 +1,7 @@
 """Truss decomposition / orderings: oracle comparisons + Lemma 4.1."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import graph as G
 from repro.core.graph import degeneracy_order, greedy_coloring
 from repro.core.truss import truss_decomposition, edge_supports
 
