@@ -252,13 +252,28 @@ def bench_pipeline_stages():
          f"frontend={t_ref * 1e6:.0f}us;"
          f"e2e_speedup={t_seed / max(t_e2e, 1e-9):.2f}")
 
+    # emission subsystem on the same graph/k: stage breakdown + throughput
+    stage_l = {}
+    (_, lst), t_list = timed(
+        lambda: ebbkc.list_cliques(
+            g, k, backend="jax",
+            engine_kwargs=dict(devices=1, stage_times=stage_l)))
+    breakdown_l = ";".join(
+        f"{s}={stage_l.get(s, 0.0) * 1e6:.0f}us"
+        for s in ("extract", "pack", "device", "emit"))
+    emit(f"pipeline/rmat12/k{k}/listing_e2e", t_list,
+         f"emitted={lst.emitted_cliques};"
+         f"cliques_per_s={lst.emitted_cliques / max(t_list, 1e-9):.0f};"
+         f"overflowed={lst.overflowed_tiles};"
+         f"sink_bytes={lst.sink_bytes};{breakdown_l}")
+
 
 # ---------------------------------------------------------------------------
 # Multi-device dispatch: front-end-to-finish sweep over device counts
 # ---------------------------------------------------------------------------
 
 def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
-                   out_json=None):
+                   out_json=None, with_listing=False, baseline=None):
     """Sweep `engine_jax.count(devices=n)` over device counts.
 
     Times front-end-to-finish (extract + pack + device + combine, plan
@@ -266,9 +281,16 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
     speedup vs the 1-device baseline, and verifies every device count
     produces the identical clique count -- any mismatch exits non-zero
     (the CI bench-smoke gate).
+
+    With ``with_listing`` the sweep also runs the emission subsystem per
+    (k, devices): listing throughput in cliques/s plus the emission stats
+    (emitted/overflowed/sink bytes), parity-checked against the count.
+    ``baseline`` (a previously committed JSON, e.g. BENCH_pr3.json) diffs
+    every matching record's count/emitted against this run -- a count
+    regression fails loudly (non-zero exit).
     """
     import jax
-    from repro.core import engine_jax, pipeline
+    from repro.core import ebbkc, engine_jax, pipeline
     from repro.launch.clique import load_graph
     from repro.runtime.dispatch import resolve_devices
 
@@ -300,11 +322,36 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                  f"overlap_s={r.stats.staging_overlap_s:.3f};"
                  f"speedup_vs_dev1={speedup:.2f}")
             records.append({
+                "kind": "count",
                 "graph": graph_spec, "k": k, "devices": n,
                 "devices_used": used, "seconds": t, "count": r.count,
                 "tiles": r.tiles, "spilled": r.stats.spilled_tiles,
                 "staging_overlap_s": r.stats.staging_overlap_s,
                 "speedup_vs_dev1": speedup,
+            })
+            if not with_listing:
+                continue
+            def run_listing():
+                return ebbkc.list_cliques(
+                    g, k, backend="jax", plan=plan,
+                    engine_kwargs=dict(devices=n))
+            (_, lst), t_l = timed(run_listing)
+            if lst.emitted_cliques != ref_count:
+                mismatches.append((k, n, lst.emitted_cliques, ref_count))
+            rate = lst.emitted_cliques / max(t_l, 1e-9)
+            emit(f"listing/{gname}/k{k}/dev{n}", t_l,
+                 f"emitted={lst.emitted_cliques};"
+                 f"cliques_per_s={rate:.0f};"
+                 f"overflowed={lst.overflowed_tiles};"
+                 f"sink_bytes={lst.sink_bytes}")
+            records.append({
+                "kind": "listing",
+                "graph": graph_spec, "k": k, "devices": n,
+                "devices_used": used, "seconds": t_l,
+                "count": lst.emitted_cliques,
+                "cliques_per_s": rate,
+                "overflowed_tiles": lst.overflowed_tiles,
+                "sink_bytes": lst.sink_bytes,
             })
     if out_json:
         payload = {"graph": graph_spec, "ks": list(ks),
@@ -313,11 +360,50 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
         with open(out_json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {out_json}", file=sys.stderr)
-    if mismatches:
+    regressions = diff_against_baseline(records, baseline) if baseline else []
+    if mismatches or regressions:
         for k, n, got, want in mismatches:
             print(f"PARITY FAILURE k={k} devices={n}: {got} != {want}",
                   file=sys.stderr)
+        for k, n, got, want in regressions:
+            print(f"BASELINE REGRESSION k={k} devices={n}: {got} != "
+                  f"baseline {want}", file=sys.stderr)
         raise SystemExit(1)
+
+
+def diff_against_baseline(records, baseline_path):
+    """Compare this run's counts against a committed baseline JSON.
+
+    Matches records on (kind, graph, k, devices) and flags any count
+    disagreement -- the regression gate of the CI bench-smoke job (the
+    committed baseline is BENCH_pr3.json).  Records present on only one
+    side are counted in the summary line but not fatal (the suites may
+    differ in scope).
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)["records"]
+
+    def key(r):
+        return (r.get("kind", "count"), r["graph"], r["k"], r["devices"])
+
+    base_by_key = {key(r): r for r in base}
+    mismatches = []
+    compared = 0
+    run_only = 0
+    for r in records:
+        b = base_by_key.get(key(r))
+        if b is None:
+            run_only += 1
+            continue
+        compared += 1
+        if r["count"] != b["count"]:
+            mismatches.append((r["k"], r["devices"], r["count"], b["count"]))
+    base_only = len(base) - compared
+    print(f"# baseline {baseline_path}: {compared} records compared, "
+          f"{len(mismatches)} count mismatches "
+          f"({run_only} run-only / {base_only} baseline-only skipped)",
+          file=sys.stderr)
+    return mismatches
 
 
 # ---------------------------------------------------------------------------
@@ -406,6 +492,13 @@ def main() -> None:
                     help="comma list of clique sizes for the dispatch sweep")
     ap.add_argument("--json", default=None,
                     help="write dispatch-sweep records to this JSON file")
+    ap.add_argument("--list", action="store_true", dest="with_listing",
+                    help="also benchmark the emission subsystem per "
+                         "(k, devices): cliques/s + emission stats")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (e.g. BENCH_pr3.json); "
+                         "any count mismatch vs matching records exits "
+                         "non-zero")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.devices:
@@ -417,7 +510,8 @@ def main() -> None:
             f"--xla_force_host_platform_device_count={max(counts)}")
         ks = tuple(int(x) for x in args.k.split(","))
         bench_dispatch(graph_spec=args.graph, ks=ks, device_counts=counts,
-                       out_json=args.json)
+                       out_json=args.json, with_listing=args.with_listing,
+                       baseline=args.baseline)
         return
     wanted = set(args.benches)
     for fn in ALL:

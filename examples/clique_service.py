@@ -9,8 +9,10 @@ end-to-end application is a distributed clique-analytics service):
   4. stream capacity-batched packed tiles and shard them across ALL local
      devices (repro.runtime.dispatch: scheduler LPT bins -> real devices,
      double-buffered host->device staging), exact host combine;
-  5. serve per-snapshot clique-density reports, with checkpointed progress
-     so a killed service resumes at the next snapshot.
+  5. serve per-snapshot clique-density reports AND a materializing query --
+     "top-N k-cliques containing vertex v" -- off the SAME cached plan via
+     the emission subsystem (repro.core.listing), with checkpointed
+     progress so a killed service resumes at the next snapshot.
 
     PYTHONPATH=src python examples/clique_service.py --snapshots 3 --k 5
     # multi-device serving on a CPU host:
@@ -23,8 +25,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import engine_jax, pipeline
+from repro.core import engine_jax, listing, pipeline
 from repro.data import powerlaw_graph, rmat_graph
 
 
@@ -43,10 +47,41 @@ def answer_query(plan, k, devices="all"):
         r.stats.staging_overlap_s
 
 
+class TopNContainingSink(listing.CliqueSink):
+    """Keep the first N cliques that contain vertex v (stream order);
+    ``full`` stops the producer as soon as N are collected."""
+
+    def __init__(self, v: int, n: int, k: int):
+        super().__init__()
+        self.v, self.n = v, n
+        self._hits = listing.ArraySink(k, max_out=n)
+
+    @property
+    def full(self):
+        return self._hits.full
+
+    def emit(self, cliques):
+        self._hits.emit(cliques[(cliques == self.v).any(axis=1)])
+        return self._account(cliques)
+
+    def result(self):
+        return self._hits.result()
+
+
+def answer_topn_query(plan, k, v, topn, devices="all"):
+    """Top-N k-cliques containing vertex v, materialized off the cached
+    plan through the emission subsystem; returns ((n, k) rows, stats)."""
+    sink = TopNContainingSink(v, topn, k)
+    res = listing.stream_cliques(plan, k, sink, devices=devices)
+    return sink.result(), res.stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--snapshots", type=int, default=3)
     ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--topn", type=int, default=5,
+                    help="N for the top-N cliques-containing-v query")
     ap.add_argument("--ckpt", default="/tmp/repro_clique_service")
     args = ap.parse_args()
 
@@ -74,6 +109,14 @@ def main():
         n_tiles = report[args.k][1]
         print(f"[{name}] n={g.n} m={g.m} tau={tau} tiles={n_tiles} "
               f"devices={jax.device_count()} plan={t_plan:.2f}s -> {line}")
+        # materializing query off the SAME plan: top-N cliques @ vertex v
+        v = int(np.argmax(g.degrees()))
+        t0 = time.time()
+        rows, lst = answer_topn_query(plan, args.k, v, args.topn)
+        print(f"[{name}] top-{args.topn} {args.k}-cliques @ v={v}: "
+              f"{len(rows)} found ({lst.emitted_cliques} scanned, "
+              f"overflowed={lst.overflowed_tiles}, {time.time() - t0:.2f}s)"
+              + (f" first={rows[0].tolist()}" if len(rows) else ""))
         save_checkpoint(args.ckpt, i + 1,
                         {"done": jnp.int32(i + 1)},
                         metadata={"snapshot": name,

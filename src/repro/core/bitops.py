@@ -1,17 +1,29 @@
-"""Bitset helpers.
+"""Bit-manipulation helpers -- the single home for both engines.
 
 Host engine uses arbitrary-precision python ints as bitsets (C-speed AND /
 popcount via ``int.bit_count``), mirroring the paper's adjacency-bitmap
-implementations (BitCol/SDegree).  The device engine uses packed uint32 words;
-packing utilities here are shared by tests and the JAX path.
+implementations (BitCol/SDegree).  The device engine uses packed uint32
+words; the packed-word helpers here (``pack_bits``, ``gt_masks_np``, the
+traced ``popcount_words`` / ``unpack_bits``) are shared by the vectorized
+pipeline, the Pallas kernels (re-exported via ``repro.kernels.common``),
+and tests -- one definition, one test (``tests/test_bitops.py``).
 """
+
 from __future__ import annotations
 
+import sys
 from typing import Iterator, List, Sequence
 
 import numpy as np
 
 WORD = 32
+
+_LITTLE = sys.byteorder == "little"
+
+
+# ---------------------------------------------------------------------------
+# python-int bitsets (host recursion)
+# ---------------------------------------------------------------------------
 
 
 def bits(x: int) -> Iterator[int]:
@@ -42,6 +54,35 @@ def rows_from_pairs(num_vertices: int, pairs: Sequence[tuple]) -> List[int]:
         rows[a] |= 1 << b
         rows[b] |= 1 << a
     return rows
+
+
+# ---------------------------------------------------------------------------
+# packed uint32 words (device tiles)
+# ---------------------------------------------------------------------------
+
+
+def num_words(T: int) -> int:
+    assert T % WORD == 0, "tile size must be a multiple of 32"
+    return T // WORD
+
+
+def pack_bits(dense: np.ndarray) -> np.ndarray:
+    """(..., T) bool -> (..., T//32) uint32; bit j of word w = column 32w+j.
+
+    Matches :func:`pack_rows` bit-for-bit but runs as one ``np.packbits``
+    call instead of a per-bit Python loop.
+    """
+    packed = np.packbits(dense, axis=-1, bitorder="little")
+    if not _LITTLE:  # pragma: no cover - big-endian hosts
+        shape = packed.shape
+        packed = packed.reshape(shape[:-1] + (-1, 4))[..., ::-1].reshape(shape)
+    return np.ascontiguousarray(packed).view(np.uint32)
+
+
+def gt_masks_np(T: int) -> np.ndarray:
+    """(T, W) uint32: gt[v] has exactly the bits {v+1, ..., T-1} set."""
+    dense = np.arange(T)[None, :] > np.arange(T)[:, None]
+    return pack_bits(dense)
 
 
 def pack_rows(rows: Sequence[int], T: int) -> np.ndarray:
@@ -79,3 +120,35 @@ def dense_from_rows(rows: Sequence[int], T: int) -> np.ndarray:
             if j < T:
                 out[i, j] = 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# traced packed-word helpers (device kernels; re-exported by kernels.common).
+# jax is imported lazily so the host engine chain (engine_np -> bitops)
+# stays jax-free at import time; after the first call it's a dict lookup.
+# ---------------------------------------------------------------------------
+
+
+def popcount_words(x):
+    """Per-word popcount of packed (..., W) uint32 (traced)."""
+    import jax
+
+    return jax.lax.population_count(x)
+
+
+def unpack_bits(x, T: int):
+    """(..., W) uint32 -> (..., T) {0,1} uint32 (bit j of word w -> w*32+j)."""
+    import jax.numpy as jnp
+
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    out = (x[..., None] >> shifts) & jnp.uint32(1)
+    return out.reshape(*x.shape[:-1], T)
+
+
+def bit_at(x, v):
+    """Extract bit v (scalar, possibly traced) from packed (..., W) uint32."""
+    import jax.numpy as jnp
+
+    v = jnp.asarray(v, dtype=jnp.int32)
+    word = jnp.take(x, v // WORD, axis=-1)
+    return (word >> (v % WORD).astype(jnp.uint32)) & jnp.uint32(1)

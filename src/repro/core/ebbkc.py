@@ -67,13 +67,19 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
 
 def list_cliques(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
                  max_out: Optional[int] = None,
-                 plan: Optional[pipeline.PipelinePlan] = None
+                 plan: Optional[pipeline.PipelinePlan] = None,
+                 backend: str = "host",
+                 engine_kwargs: Optional[dict] = None
                  ) -> Tuple[np.ndarray, Stats]:
     """List k-cliques; returns (count x k) array of global vertex ids.
 
     With ``max_out`` set, exactly ``min(max_out, total)`` cliques are
     returned (a whole tile's results are collected before the bound check,
-    then truncated).
+    then truncated).  ``backend="jax"`` streams packed batches through the
+    Pallas emission kernels (:mod:`repro.core.listing`) -- identical clique
+    set, never truncated on emit-buffer overflow (overflowed tiles re-list
+    on the host, ``stats.overflowed_tiles``); ``engine_kwargs`` forwards
+    knobs like ``devices=`` / ``capacity=`` to ``listing.stream_cliques``.
     """
     stats = Stats()
     if k == 1:
@@ -81,6 +87,12 @@ def list_cliques(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
         return out[:max_out], stats
     if k == 2:
         return g.edges[:max_out].copy(), stats
+    if backend == "jax":
+        from . import listing
+        sink = listing.ArraySink(k, max_out=max_out)
+        res = listing.stream_cliques(plan or g, k, sink, order=order,
+                                     et_t=et_t, **(engine_kwargs or {}))
+        return sink.result(), res.stats
     out_all: List[Tuple[int, ...]] = []
     for tile in pipeline.iter_tiles(plan or g, k, mode=order):
         cand = (1 << tile.s) - 1

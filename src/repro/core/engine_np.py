@@ -46,6 +46,12 @@ class Stats:
     # staging (the device may finish before the host returns for it);
     # 0.0 under synchronous staging
     staging_overlap_s: float = 0.0
+    # emission subsystem accounting (repro.core.listing): cliques accepted
+    # by the sink, tiles whose device emit buffer overflowed (re-listed on
+    # the host -- never truncated), and bytes the sink wrote
+    emitted_cliques: int = 0
+    overflowed_tiles: int = 0
+    sink_bytes: int = 0
 
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:

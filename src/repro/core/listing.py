@@ -1,0 +1,385 @@
+"""Clique emission subsystem: device listing kernels -> global ids -> sinks.
+
+The counting engine (:mod:`repro.core.engine_jax`) reduces every tile to a
+scalar; this module is its *output* twin (DESIGN.md section 6).  The same
+streaming tile pipeline feeds the Pallas listing kernel family
+(:mod:`repro.kernels.clique_list`), which materializes each completed
+l-clique's local vertex ids into a fixed-capacity per-tile buffer; the host
+then decodes tile-local ids through the batch's ``verts`` membership table
+back to global vertex ids and streams the rows into a pluggable
+:class:`CliqueSink`.
+
+Exactness invariants:
+
+* **exact-once** -- each k-clique is produced by exactly one anchor edge
+  (the paper's Eq. 2 attribution), so no de-duplication is ever needed;
+* **never truncated** -- emit buffers are sized by a first count pass
+  (rounded to a power of two to bound jit recompiles, capped at
+  ``max_capacity``); a tile whose true count exceeds its buffer raises the
+  kernel's overflow flag and is re-listed by the host bitset recursion
+  (``Stats.overflowed_tiles``), exactly like oversize tiles spill
+  (``Stats.spilled_tiles``).  The sink sees every clique either way;
+* **deterministic order** -- rows arrive in stream order (spill tiles,
+  then packed batches per size bin; tiles in batch order inside each
+  batch; each row sorted ascending), invariant to device count and
+  staging mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from .bitops import unpack_mask
+from .engine_np import Stats, list_rec_C
+from .graph import ragged_expand
+from . import pipeline
+from . import tiles as tiles_mod
+from ..kernels import ops as kops
+
+#: default cap on the per-tile emit buffer (rows); tiles whose true count
+#: exceeds it overflow to the host spill path instead of growing VMEM
+MAX_CAPACITY = 1 << 14
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+
+class CliqueSink:
+    """Pluggable consumer of decoded clique rows.
+
+    ``emit`` receives an ``(n, k) int64`` array of global vertex ids (rows
+    sorted ascending) and returns how many rows it accepted; ``full`` lets
+    bounded sinks stop the producer early.  ``bytes_written`` accounts the
+    payload bytes of accepted rows (surfaced as ``Stats.sink_bytes``).
+    """
+
+    def __init__(self) -> None:
+        self.accepted = 0
+        self.bytes_written = 0
+
+    @property
+    def full(self) -> bool:
+        return False
+
+    def emit(self, cliques: np.ndarray) -> int:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def _account(self, arr: np.ndarray) -> int:
+        self.accepted += arr.shape[0]
+        self.bytes_written += arr.nbytes
+        return arr.shape[0]
+
+
+class CallbackSink(CliqueSink):
+    """Invoke ``fn(rows)`` for every emitted chunk (streaming consumers)."""
+
+    def __init__(self, fn: Callable[[np.ndarray], None]) -> None:
+        super().__init__()
+        self.fn = fn
+
+    def emit(self, cliques: np.ndarray) -> int:
+        if cliques.shape[0]:
+            self.fn(cliques)
+        return self._account(cliques)
+
+
+class ArraySink(CliqueSink):
+    """Bounded in-memory buffer; backs ``list_cliques(max_out=...)``."""
+
+    def __init__(self, k: int, max_out: Optional[int] = None) -> None:
+        super().__init__()
+        self.k = int(k)
+        self.max_out = max_out
+        self._chunks: List[np.ndarray] = []
+
+    @property
+    def full(self) -> bool:
+        return self.max_out is not None and self.accepted >= self.max_out
+
+    def emit(self, cliques: np.ndarray) -> int:
+        if self.max_out is not None:
+            cliques = cliques[: max(self.max_out - self.accepted, 0)]
+        if cliques.shape[0]:
+            self._chunks.append(cliques)
+        return self._account(cliques)
+
+    def result(self) -> np.ndarray:
+        if not self._chunks:
+            return np.zeros((0, self.k), dtype=np.int64)
+        return np.concatenate(self._chunks)
+
+
+class NpzSink(CliqueSink):
+    """Accumulate rows and write one NPZ (key ``cliques``) on ``close``."""
+
+    def __init__(self, path: str, k: int, max_out: Optional[int] = None) -> None:
+        super().__init__()
+        self.path = path
+        self._inner = ArraySink(k, max_out=max_out)
+
+    @property
+    def full(self) -> bool:
+        return self._inner.full
+
+    def emit(self, cliques: np.ndarray) -> int:
+        n = self._inner.emit(cliques)
+        self.accepted = self._inner.accepted
+        self.bytes_written = self._inner.bytes_written
+        return n
+
+    def close(self) -> None:
+        np.savez_compressed(self.path, cliques=self._inner.result())
+
+
+# ---------------------------------------------------------------------------
+# decode: tile-local kernel output -> sorted global id rows
+# ---------------------------------------------------------------------------
+
+
+def _rows_from_packed(A_tile: np.ndarray, s: int) -> List[int]:
+    """(T, W) uint32 packed adjacency -> python-int bitset rows [0..s)."""
+    return [unpack_mask(A_tile[i]) for i in range(s)]
+
+
+def _decode_local(
+    anchor: np.ndarray, verts: np.ndarray, local: np.ndarray
+) -> np.ndarray:
+    """One tile: (n, l) local ids -> (n, 2+l) sorted global rows."""
+    if local.shape[0] == 0:
+        return np.zeros((0, 2 + local.shape[1]), dtype=np.int64)
+    glob = verts[local]
+    out = np.concatenate(
+        [np.broadcast_to(anchor, (local.shape[0], 2)), glob],
+        axis=1,
+    )
+    return np.sort(out, axis=1)
+
+
+def _list_tile_host(
+    rows: Sequence[int],
+    s: int,
+    anchor: np.ndarray,
+    verts: np.ndarray,
+    l: int,
+    et_t: int = 3,
+) -> np.ndarray:
+    """Host bitset recursion listing for one tile (spill/overflow path)."""
+    local: List[tuple] = []
+    list_rec_C(rows, (1 << s) - 1, l, (), local, et_t=et_t)
+    loc = np.asarray(local, dtype=np.int64).reshape(-1, l)
+    return _decode_local(np.asarray(anchor, dtype=np.int64), verts, loc)
+
+
+def list_spilled(
+    tile: tiles_mod.Tile, l: int, stats: Stats, et_t: int = 3
+) -> np.ndarray:
+    """List one oversize tile on the host (mirrors ``count_spilled``)."""
+    stats.spilled_tiles += 1
+    stats.spill_sizes.append(tile.s)
+    return _list_tile_host(
+        tile.rows,
+        tile.s,
+        np.asarray(tile.anchor, dtype=np.int64),
+        tile.verts,
+        l,
+        et_t=et_t,
+    )
+
+
+def decode_batch(
+    batch: pipeline.TileBatch,
+    bufs: np.ndarray,
+    counts: np.ndarray,
+    overflow: np.ndarray,
+    l: int,
+    stats: Stats,
+    et_t: int = 3,
+) -> np.ndarray:
+    """Decode one harvested (buffer, count, overflow) triple to global rows.
+
+    Non-overflowed tiles decode vectorized straight from the kernel buffer;
+    overflowed tiles are re-listed by the host recursion from the packed
+    adjacency (never truncated) and spliced back in tile order.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    overflow = np.asarray(overflow)
+    counts_eff = np.where(overflow > 0, 0, counts)
+    owner, pos = ragged_expand(counts_eff)
+    local = bufs[owner, pos]  # (n, l) local ids
+    glob = batch.verts[owner[:, None], local]
+    decoded = np.concatenate([batch.anchors[owner], glob], axis=1)
+    decoded = np.sort(decoded, axis=1) if decoded.shape[0] else decoded
+    if not overflow.any():
+        return decoded
+    parts = np.split(decoded, np.cumsum(counts_eff)[:-1])
+    for b in np.nonzero(overflow)[0]:
+        stats.overflowed_tiles += 1
+        s = int(batch.sizes[b])
+        rows = _rows_from_packed(batch.A[b], s)
+        parts[b] = _list_tile_host(
+            rows, s, batch.anchors[b], batch.verts[b], l, et_t=et_t
+        )
+    return np.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# capacity sizing
+# ---------------------------------------------------------------------------
+
+
+def capacity_for(counts: np.ndarray, max_capacity: int = MAX_CAPACITY) -> int:
+    """Emit-buffer rows for a batch: pow2 ceil of the max per-tile count.
+
+    Power-of-two rounding keeps the number of distinct (T, capacity) kernel
+    shapes -- and hence jit recompiles -- logarithmic; ``max_capacity``
+    bounds VMEM, overflowing the rare monster tile to the host spill path
+    instead.
+    """
+    m = int(np.asarray(counts).max(initial=1))
+    cap = 1
+    while cap < m:
+        cap *= 2
+    return max(1, min(cap, int(max_capacity)))
+
+
+# ---------------------------------------------------------------------------
+# streaming engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ListResult:
+    """What ``stream_cliques`` hands back (the sink holds the rows)."""
+
+    stats: Stats
+    tiles: int = 0
+    max_tile: int = 0
+
+
+def _emit(sink: CliqueSink, arr: np.ndarray, stats: Stats) -> None:
+    stats.emitted_cliques += sink.emit(arr)
+
+
+def list_batch(
+    batch: pipeline.TileBatch,
+    l: int,
+    stats: Stats,
+    *,
+    capacity: Optional[int] = None,
+    max_capacity: int = MAX_CAPACITY,
+    interpret: Optional[bool] = None,
+    et_t: int = 3,
+) -> np.ndarray:
+    """Single-device emit step: count pass -> sized list kernel -> decode."""
+    A = jnp.asarray(batch.A)
+    cand = jnp.asarray(batch.cand)
+    if capacity is None:
+        counts = np.asarray(kops.count_tiles(A, cand, l, interpret=interpret))
+        cap = capacity_for(counts, max_capacity)
+    else:
+        cap = max(1, int(capacity))
+    bufs, cnt, ovf = kops.list_tiles(A, cand, l, capacity=cap, interpret=interpret)
+    return decode_batch(
+        batch,
+        np.asarray(bufs),
+        np.asarray(cnt),
+        np.asarray(ovf),
+        l,
+        stats,
+        et_t=et_t,
+    )
+
+
+def stream_cliques(
+    source,
+    k: int,
+    sink: CliqueSink,
+    *,
+    order: str = "hybrid",
+    use_rule2: bool = True,
+    et_t: int = 3,
+    batch_size: int = 256,
+    bins: Sequence[int] = pipeline.BINS,
+    capacity: Optional[int] = None,
+    max_capacity: int = MAX_CAPACITY,
+    devices=None,
+    async_staging: bool = True,
+    interpret: Optional[bool] = None,
+    stage_times: Optional[dict] = None,
+) -> ListResult:
+    """List all k-cliques of ``source`` (Graph or PipelinePlan) into ``sink``.
+
+    The accelerator twin of ``ebbkc.list_cliques(backend="host")``: streams
+    capacity-batched packed tiles, runs the Pallas listing kernels (sized by
+    a first count pass unless ``capacity`` pins the buffer), decodes on the
+    host, and feeds the sink in deterministic stream order.  ``devices``
+    routes batches through :class:`repro.runtime.dispatch.ListDispatcher`
+    (per-device placement, double-buffered staging, FIFO harvest -- same
+    knobs as the counting engine).  Requires k >= 3 (the k <= 2 cases have
+    closed forms; see ``ebbkc.list_cliques``).
+    """
+    if k < 3:
+        raise ValueError("stream_cliques requires k >= 3")
+    stats = Stats()
+    res = ListResult(stats)
+    l = k - 2
+    disp = None
+    if devices is not None:
+        from ..runtime.dispatch import ListDispatcher
+
+        disp = ListDispatcher(
+            l,
+            devices,
+            sink=sink,
+            stats=stats,
+            capacity=capacity,
+            max_capacity=max_capacity,
+            interpret=interpret,
+            async_staging=async_staging,
+            et_t=et_t,
+            stage_times=stage_times,
+        )
+    for item in pipeline.stream_batches(
+        source,
+        k,
+        order=order,
+        use_rule2=use_rule2,
+        batch_size=batch_size,
+        bins=bins,
+        timings=stage_times,
+    ):
+        if sink.full:
+            break
+        if isinstance(item, tiles_mod.Tile):
+            res.tiles += 1
+            res.max_tile = max(res.max_tile, item.s)
+            _emit(sink, list_spilled(item, l, stats, et_t=et_t), stats)
+            continue
+        res.tiles += item.B
+        res.max_tile = max(res.max_tile, item.T)
+        if disp is not None:
+            disp.submit(item)
+            continue
+        arr = list_batch(
+            item,
+            l,
+            stats,
+            capacity=capacity,
+            max_capacity=max_capacity,
+            interpret=interpret,
+            et_t=et_t,
+        )
+        _emit(sink, arr, stats)
+    if disp is not None:
+        disp.finish()
+    stats.sink_bytes += sink.bytes_written
+    return res

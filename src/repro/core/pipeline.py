@@ -32,33 +32,18 @@ reference oracle; parity tests assert byte-identical packed batches.
 from __future__ import annotations
 
 import dataclasses
-import sys
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .bitops import pack_bits as _pack_bits
 from .graph import Graph, greedy_coloring, color_vertex_order, ragged_expand
 from .tiles import Tile
 from .truss import TrussDecomposition, truss_decomposition
 
 #: power-of-two tile-size bins; tiles wider than the last bin spill to host
 BINS = (32, 64, 128, 256)
-
-_LITTLE = sys.byteorder == "little"
-
-
-def _pack_bits(dense: np.ndarray) -> np.ndarray:
-    """(..., T) bool -> (..., T//32) uint32; bit j of word w = column 32w+j.
-
-    Matches :func:`repro.core.bitops.pack_rows` bit-for-bit but runs as one
-    ``np.packbits`` call instead of a per-bit Python loop.
-    """
-    packed = np.packbits(dense, axis=-1, bitorder="little")
-    if not _LITTLE:  # pragma: no cover - big-endian hosts
-        shape = packed.shape
-        packed = packed.reshape(shape[:-1] + (-1, 4))[..., ::-1].reshape(shape)
-    return np.ascontiguousarray(packed).view(np.uint32)
 
 
 def _edge_lookup(ekeys: np.ndarray, m: int, n: int, lo: np.ndarray,
@@ -383,13 +368,21 @@ def _relabel_chunk(D, V, colors, perm):
 
 @dataclasses.dataclass
 class TileBatch:
-    """One fixed-shape packed batch plus per-tile scheduler metadata."""
+    """One fixed-shape packed batch plus per-tile scheduler metadata.
+
+    ``verts`` is the decode table of the emission subsystem
+    (:mod:`repro.core.listing`): local slot i of tile b is global vertex
+    ``verts[b, i]`` (post-relabel for hybrid mode; slots >= ``sizes[b]``
+    are padding).  Together with ``anchors`` it is everything needed to
+    translate kernel-emitted local clique ids back to global ids.
+    """
     T: int
     A: np.ndarray        # (B, T, W) uint32 adjacency bitsets
     cand: np.ndarray     # (B, W) uint32 candidate masks
     sizes: np.ndarray    # (B,) int32 member counts
     nedges: np.ndarray   # (B,) int32 tile edge counts (cost-model input)
     anchors: np.ndarray  # (B, 2) int64 anchor vertices
+    verts: np.ndarray    # (B, T) int64 local slot -> global vertex id
 
     @property
     def B(self) -> int:
@@ -405,7 +398,7 @@ def _pack_batch(g: Graph, table: TileTable, ids: np.ndarray, T: int,
     A = _pack_bits(D)
     cand = _pack_bits(np.arange(T)[None, :] < sz[:, None])
     return TileBatch(T, A, cand, sz.astype(np.int32),
-                     nedges.astype(np.int32), table.anchors[ids].copy())
+                     nedges.astype(np.int32), table.anchors[ids].copy(), V)
 
 
 def _tiles_from_ids(g: Graph, table: TileTable, ids: np.ndarray,

@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: l-clique *listing* inside dense bitset tiles.
+
+Counting (:mod:`repro.kernels.clique_count`) collapses the last two DFS
+levels into one vectorized popcount; listing cannot, because the caller
+needs the member ids of every completed clique.  This kernel family keeps
+the same explicit-stack DFS (scalar core drives a ``lax.while_loop``, VPU
+does the (T, W) set math) but descends one level further and, whenever one
+level remains, *emits*: every vertex left in the candidate bitset completes
+the current prefix, so the whole frontier is scattered into a fixed-capacity
+per-tile output buffer in a single vectorized step (no per-clique scalar
+loop).
+
+Per tile the kernel returns
+
+* ``out (capacity, l) int32`` -- local vertex ids of the first ``capacity``
+  cliques, in DFS (lexicographic local id) order;
+* ``count () uint32``        -- the TRUE number of l-cliques found (keeps
+  counting past capacity, so the host can size a retry or cross-check the
+  counting kernel);
+* ``overflow () uint32``     -- 1 iff ``count > capacity``.  The host never
+  truncates: an overflowed tile is re-listed by the host bitset recursion
+  (the spill path of :mod:`repro.core.listing`).
+
+The emit buffer lives in the loop carry (a pure (capacity, l) value, like
+the stack), so the DFS stays a single functional ``while_loop`` and the
+only ref writes happen once at the end -- same discipline as the counting
+kernel.  VMEM per program: A block + gt mask + stack + the buffer
+(capacity * l * 4 bytes; the default cap ``listing.MAX_CAPACITY`` = 16384
+rows bounds it at 16384 x 5 x 4 B = 320 KiB worst case for l = 5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import WORD, gt_masks_np, num_words, popcount, unpack_bits
+
+
+def _emit_frontier(buf, count, cand, prefix, iota, *, l: int, T: int, capacity: int):
+    """Scatter every cand vertex (completing ``prefix``) into ``buf``.
+
+    Vertex v's row is ``prefix[:l-1] + [v]``; its slot is ``count`` plus its
+    rank among the set bits.  Rows past ``capacity`` are dropped by the
+    scatter (mode="drop") while ``count`` keeps the true total.
+    """
+    vbit = unpack_bits(cand, T).astype(jnp.int32)  # (T,) 0/1
+    dest = jnp.where(
+        vbit > 0,
+        count.astype(jnp.int32) + jnp.cumsum(vbit) - 1,
+        jnp.int32(capacity),  # out of bounds -> dropped
+    )
+    if l == 1:
+        rows = iota[:, None]
+    else:
+        rows = jnp.concatenate(
+            [jnp.broadcast_to(prefix[: l - 1], (T, l - 1)), iota[:, None]],
+            axis=1,
+        )
+    buf = buf.at[dest].set(rows, mode="drop")
+    return buf, count + vbit.sum().astype(jnp.uint32)
+
+
+def _kernel(
+    A_ref, cand_ref, gt_ref, out_ref, cnt_ref, ovf_ref, *, l: int, T: int, capacity: int
+):
+    W = num_words(T)
+    A = A_ref[0]  # (T, W)
+    cand0 = cand_ref[0]  # (W,)
+    gt = gt_ref[...]  # (T, W)
+    iota = jax.lax.iota(jnp.int32, T)
+
+    # stack[d] = candidate bitset at depth d; cursor[d] = next vertex to
+    # try; prefix[d] = vertex chosen when descending from depth d.  Depth d
+    # has l - d levels remaining; emission happens at depth l - 1.
+    depth0 = jnp.int32(0)
+    stack0 = jnp.zeros((l, W), dtype=jnp.uint32).at[0].set(cand0)
+    cursor0 = jnp.zeros((l,), dtype=jnp.int32)
+    prefix0 = jnp.zeros((l,), dtype=jnp.int32)
+    buf0 = jnp.zeros((capacity, l), dtype=jnp.int32)
+    count0 = jnp.uint32(0)
+
+    def cond(state):
+        return state[0] >= 0
+
+    def body(state):
+        depth, stack, cursor, prefix, buf, count = state
+        cand = stack[depth]
+        remaining = l - depth
+
+        def emit(_):
+            # one level remains: the whole frontier completes the prefix
+            b2, c2 = _emit_frontier(
+                buf, count, cand, prefix, iota, l=l, T=T, capacity=capacity
+            )
+            return depth - 1, stack, cursor, prefix, b2, c2
+
+        def step(_):
+            v = cursor[depth]
+
+            def pop(_):
+                return depth - 1, stack, cursor, prefix, buf, count
+
+            def advance(_):
+                word = cand[v // WORD]
+                bit = (word >> (v % WORD).astype(jnp.uint32)) & jnp.uint32(1)
+                cur2 = cursor.at[depth].set(v + 1)
+
+                def push(_):
+                    sub = cand & A[v] & gt[v]
+                    nsub = popcount(sub).sum().astype(jnp.int32)
+                    ok = nsub >= remaining - 1
+
+                    def do_push(_):
+                        st = stack.at[depth + 1].set(sub)
+                        cu = cur2.at[depth + 1].set(v + 1)
+                        pf = prefix.at[depth].set(v)
+                        return depth + 1, st, cu, pf, buf, count
+
+                    return jax.lax.cond(
+                        ok,
+                        do_push,
+                        lambda _: (depth, stack, cur2, prefix, buf, count),
+                        None,
+                    )
+
+                return jax.lax.cond(
+                    bit > 0,
+                    push,
+                    lambda _: (depth, stack, cur2, prefix, buf, count),
+                    None,
+                )
+
+            return jax.lax.cond(v >= T, pop, advance, None)
+
+        return jax.lax.cond(remaining == 1, emit, step, None)
+
+    _, _, _, _, buf, count = jax.lax.while_loop(
+        cond, body, (depth0, stack0, cursor0, prefix0, buf0, count0)
+    )
+    out_ref[0] = buf
+    cnt_ref[0] = count
+    ovf_ref[0] = (count > jnp.uint32(capacity)).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("l", "capacity", "interpret"))
+def clique_list_tiles(
+    A: jax.Array, cand: jax.Array, l: int, capacity: int, interpret: bool = True
+):
+    """List l-cliques per tile into fixed-capacity buffers.
+
+    A: (B, T, W) uint32 packed adjacency, cand: (B, W) uint32.
+    Returns (out (B, capacity, l) int32 local ids, count (B,) uint32 true
+    per-tile totals, overflow (B,) uint32 flags).
+    """
+    if l < 1:
+        raise ValueError("listing kernel requires l >= 1")
+    if capacity < 1:
+        raise ValueError("capacity must be >= 1")
+    B, T, W = A.shape
+    assert W == num_words(T) and cand.shape == (B, W)
+    gt = jnp.asarray(gt_masks_np(T))
+    kernel = functools.partial(_kernel, l=l, T=T, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, W), lambda b: (b, 0)),
+            pl.BlockSpec((T, W), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, capacity, l), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capacity, l), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.uint32),
+            jax.ShapeDtypeStruct((B,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(A, cand, gt)

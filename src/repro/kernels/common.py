@@ -1,48 +1,23 @@
-"""Shared helpers for the bitset clique kernels."""
+"""Shared helpers for the bitset clique kernels.
+
+The bit-manipulation primitives live in :mod:`repro.core.bitops` (one
+module, one test); this module re-exports them under the names the kernels
+historically used (``popcount`` here is the *traced* per-word popcount)
+plus the kernel-only combinatorics table.
+"""
+
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-WORD = 32
-
-
-def num_words(T: int) -> int:
-    assert T % WORD == 0, "tile size must be a multiple of 32"
-    return T // WORD
-
-
-def gt_masks_np(T: int) -> np.ndarray:
-    """(T, W) uint32: gt[v] has exactly the bits {v+1, ..., T-1} set."""
-    W = num_words(T)
-    out = np.zeros((T, W), dtype=np.uint32)
-    for v in range(T):
-        for w in range(W):
-            word = 0
-            for j in range(WORD):
-                if w * WORD + j > v:
-                    word |= 1 << j
-            out[v, w] = word
-    return out
-
-
-def popcount(x: jax.Array) -> jax.Array:
-    return jax.lax.population_count(x)
-
-
-def unpack_bits(x: jax.Array, T: int) -> jax.Array:
-    """(..., W) uint32 -> (..., T) {0,1} uint32 (bit j of word w -> w*32+j)."""
-    shifts = jnp.arange(WORD, dtype=jnp.uint32)
-    bits = (x[..., None] >> shifts) & jnp.uint32(1)
-    return bits.reshape(*x.shape[:-1], T)
-
-
-def bit_at(x: jax.Array, v) -> jax.Array:
-    """Extract bit v (scalar, possibly traced) from packed (..., W) uint32."""
-    v = jnp.asarray(v, dtype=jnp.int32)
-    word = jnp.take(x, v // WORD, axis=-1)
-    return (word >> (v % WORD).astype(jnp.uint32)) & jnp.uint32(1)
+from ..core.bitops import (  # noqa: F401  (re-exported kernel API)
+    WORD,
+    bit_at,
+    gt_masks_np,
+    num_words,
+    unpack_bits,
+)
+from ..core.bitops import popcount_words as popcount  # noqa: F401
 
 
 def pascal_table(nmax: int) -> np.ndarray:

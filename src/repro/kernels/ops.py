@@ -11,6 +11,7 @@ from typing import Optional
 import jax
 
 from . import clique_count as _cc
+from . import clique_list as _cl
 from . import intersect as _is
 from . import triangle_mm as _tm
 from . import ref as _ref
@@ -40,6 +41,19 @@ def count_tiles(A: jax.Array, cand: jax.Array, l: int,
     if l <= 2:
         return (_ref.clique_count_tiles_ref(A, cand, l) if l <= 2 else None)
     return _cc.clique_count_tiles(A, cand, l, interpret=interpret)
+
+
+def list_tiles(A: jax.Array, cand: jax.Array, l: int, capacity: int,
+               interpret: Optional[bool] = None):
+    """List l-cliques per tile into fixed-capacity local-id buffers.
+
+    (B,T,W) uint32 x (B,W) uint32 -> (out (B,capacity,l) int32,
+    count (B,) uint32 true totals, overflow (B,) uint32).  Overflowed
+    tiles keep the true count but only the first ``capacity`` cliques;
+    callers must route them to the host spill path, never truncate.
+    """
+    return _cl.clique_list_tiles(A, cand, l, capacity,
+                                 interpret=_auto_interpret(interpret))
 
 
 def triangles(A: jax.Array, cand: jax.Array,

@@ -17,7 +17,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from ..core import ebbkc, engine_jax, pipeline
+from ..core import ebbkc, engine_jax, listing, pipeline
 from ..core import tiles as tiles_mod
 from ..core.engine_np import Stats
 from ..core.graph import Graph
@@ -65,6 +65,14 @@ def main():
                          " host memory bounded)")
     ap.add_argument("--sync-staging", action="store_true",
                     help="disable double-buffered host->device staging")
+    ap.add_argument("--list", action="store_true", dest="list_mode",
+                    help="materialize the cliques through the emission "
+                         "subsystem instead of counting them")
+    ap.add_argument("--sink", default=None, metavar="PATH",
+                    help="with --list: write the cliques to PATH as an NPZ "
+                         "(key 'cliques'); default is an in-memory buffer")
+    ap.add_argument("--max-out", type=int, default=None,
+                    help="with --list: stop after this many cliques")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
     args = ap.parse_args()
@@ -81,6 +89,31 @@ def main():
     t0 = time.time()
     plan = pipeline.build_plan(g, order=args.order)
     t_plan = time.time() - t0
+
+    if args.list_mode:
+        sink = (listing.NpzSink(args.sink, args.k, max_out=args.max_out)
+                if args.sink
+                else listing.ArraySink(args.k, max_out=args.max_out))
+        t0 = time.time()
+        res = listing.stream_cliques(
+            plan, args.k, sink, order=args.order,
+            batch_size=args.batch_size, devices=devices,
+            async_staging=not args.sync_staging)
+        t_list = time.time() - t0
+        sink.close()
+        st = res.stats
+        rate = st.emitted_cliques / max(t_list, 1e-9)
+        print(f"k={args.k}: listed {st.emitted_cliques} cliques in "
+              f"{t_list:.2f}s ({rate:.0f} cliques/s, "
+              f"{st.sink_bytes} sink bytes"
+              f"{', -> ' + args.sink if args.sink else ''})")
+        print(f"tiles={res.tiles} spilled={st.spilled_tiles} "
+              f"overflowed={st.overflowed_tiles} devices={n_dev}")
+        if args.verify:
+            ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
+            want = ref if args.max_out is None else min(args.max_out, ref)
+            print(f"host count: {ref}  match={want == st.emitted_cliques}")
+        return
 
     stats = Stats()
     stage = {}

@@ -302,6 +302,124 @@ class Dispatcher:
         return self.total
 
 
+class ListDispatcher:
+    """Emit-mode twin of :class:`Dispatcher` for the listing subsystem.
+
+    Streams packed tile batches across the local device set and harvests
+    (count, overflow, buffer) triples instead of scalar partials.  Each
+    submit runs a two-phase device step on the LPT-chosen device: a count
+    pass sizes the emit buffer (pow2-rounded, capped -- see
+    ``repro.core.listing.capacity_for``), then the Pallas listing kernel
+    fills it.  Harvest order is FIFO, i.e. exactly the submission order, so
+    decoded rows reach the sink deterministically **in batch order** no
+    matter how many devices executed them or how staging overlapped.
+    Overflowed tiles are re-listed on the host at harvest time (never
+    truncated); the shard_map mesh path is counting-only.
+    """
+
+    def __init__(
+        self,
+        l: int,
+        devices: Union[None, int, str, Sequence] = None,
+        *,
+        sink=None,
+        stats: Optional[Stats] = None,
+        capacity: Optional[int] = None,
+        max_capacity: Optional[int] = None,
+        et_t: int = 3,
+        interpret: Optional[bool] = None,
+        async_staging: bool = True,
+        max_inflight: int = 2,
+        stage_times: Optional[dict] = None,
+    ):
+        from ..core import listing
+
+        if l < 1:
+            raise ValueError("dispatch requires l >= 1 (k >= 3)")
+        if sink is None:
+            raise ValueError("emit mode requires a CliqueSink")
+        self.l = l
+        self.sink = sink
+        self.stats = stats if stats is not None else Stats()
+        self.capacity = capacity
+        self.max_capacity = (
+            listing.MAX_CAPACITY if max_capacity is None else int(max_capacity)
+        )
+        self.et_t = et_t
+        self.interpret = interpret
+        self.async_staging = async_staging
+        self.max_inflight = max(1, int(max_inflight))
+        self.stage_times = stage_times
+        self.tiles = 0
+        self.placements: List[int] = []
+        self.devices = resolve_devices(devices)
+        # et=False: ``hard`` is then the raw per-tile count for EVERY tile
+        # (no 2-plex masking), which is exactly the emit-buffer size input
+        self._count_step = _device_step(l, "auto", False, interpret)
+        self._loads = np.zeros(len(self.devices))
+        self._inflight: Deque[Tuple[int, pipeline.TileBatch, tuple]] = (
+            collections.deque()
+        )
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
+        """Stage one batch: count pass sizes the buffer, list kernel fills it."""
+        from ..core import listing
+        from ..kernels import ops as kops
+
+        d = int(np.argmin(self._loads)) if device is None else int(device)
+        cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
+        self._loads[d] += cost
+        A = jax.device_put(batch.A, self.devices[d])
+        cand = jax.device_put(batch.cand, self.devices[d])
+        if self.capacity is None:
+            hard, _, _, _ = self._count_step(A, cand)
+            cap = listing.capacity_for(np.asarray(hard), self.max_capacity)
+        else:
+            cap = max(1, int(self.capacity))
+        out = kops.list_tiles(A, cand, self.l, capacity=cap, interpret=self.interpret)
+        self.placements.append(d)
+        self.tiles += batch.B
+        tiles, flops = self.stats.device_tiles, self.stats.device_flops
+        tiles[d] = tiles.get(d, 0) + batch.B
+        flops[d] = flops.get(d, 0) + batch_flops(batch.B, batch.T)
+        self._inflight.append((d, batch, out))
+        if not self.async_staging:
+            self._drain()
+        else:
+            while len(self._inflight) > self.max_inflight * self.n_devices:
+                self._harvest_one()
+
+    def _harvest_one(self) -> None:
+        from ..core import listing
+
+        _, batch, out = self._inflight.popleft()
+        t0 = time.perf_counter()
+        bufs, cnt, ovf = (np.asarray(x) for x in out)  # blocks
+        t1 = time.perf_counter()
+        arr = listing.decode_batch(
+            batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
+        )
+        self.stats.emitted_cliques += self.sink.emit(arr)
+        t2 = time.perf_counter()
+        if self.stage_times is not None:
+            st = self.stage_times
+            st["device"] = st.get("device", 0.0) + (t1 - t0)
+            st["emit"] = st.get("emit", 0.0) + (t2 - t1)
+
+    def _drain(self) -> None:
+        while self._inflight:
+            self._harvest_one()
+
+    def finish(self) -> int:
+        """Drain all in-flight batches; returns rows accepted by the sink."""
+        self._drain()
+        return self.sink.accepted
+
+
 def dispatch_scheduled(
     batches: Sequence[pipeline.TileBatch],
     l: int,

@@ -1,0 +1,81 @@
+"""Single test home for the bit-manipulation helpers (core.bitops).
+
+The helpers used to be duplicated between ``repro.kernels.common`` and
+``repro.core.bitops``; they now live in bitops only, re-exported by
+kernels.common -- this file asserts both the semantics and the dedup.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.kernels import common
+
+
+def _rows_as_ints(dense):
+    return [sum(1 << j for j in range(dense.shape[1]) if row[j]) for row in dense]
+
+
+def test_gt_masks_matches_mask_gt():
+    for T in (32, 64, 96):
+        gt = bitops.gt_masks_np(T)
+        assert gt.shape == (T, T // bitops.WORD) and gt.dtype == np.uint32
+        clip = (1 << T) - 1
+        for v in range(T):
+            assert bitops.unpack_mask(gt[v]) == bitops.mask_gt(v) & clip
+
+
+def test_pack_bits_matches_per_bit_packers():
+    rng = np.random.default_rng(0)
+    for T in (32, 64, 128):
+        dense = rng.random((7, T)) < 0.4
+        rows = _rows_as_ints(dense)
+        got = bitops.pack_bits(dense)
+        assert np.array_equal(got, bitops.pack_rows(rows, T)[:7])
+        for i, r in enumerate(rows):
+            assert np.array_equal(got[i], bitops.pack_mask(r, T))
+            assert bitops.unpack_mask(got[i]) == r
+
+
+def test_pack_rows_dense_roundtrip():
+    rng = np.random.default_rng(1)
+    T = 64
+    dense = (rng.random((T, T)) < 0.3).astype(np.uint8)
+    dense = np.triu(dense, 1)
+    dense = dense | dense.T
+    rows = _rows_as_ints(dense.astype(bool))
+    assert np.array_equal(bitops.dense_from_rows(rows, T), dense)
+
+
+def test_traced_helpers_match_host_ints():
+    rng = np.random.default_rng(2)
+    T = 96
+    dense = rng.random((5, T)) < 0.5
+    rows = _rows_as_ints(dense)
+    packed = jnp.asarray(bitops.pack_bits(dense))
+    # per-word popcount sums to the python-int popcount
+    pc = np.asarray(bitops.popcount_words(packed)).sum(axis=-1)
+    assert pc.tolist() == [bitops.popcount(r) for r in rows]
+    # unpack_bits reproduces the bit positions of bits()
+    ub = np.asarray(bitops.unpack_bits(packed, T))
+    for i, r in enumerate(rows):
+        assert np.nonzero(ub[i])[0].tolist() == list(bitops.bits(r))
+    # bit_at agrees with direct bit tests
+    for v in (0, 1, 31, 32, 63, 95):
+        got = np.asarray(bitops.bit_at(packed, v))
+        assert got.tolist() == [(r >> v) & 1 for r in rows]
+
+
+def test_bits_iterates_ascending():
+    x = (1 << 0) | (1 << 31) | (1 << 32) | (1 << 70)
+    assert list(bitops.bits(x)) == [0, 31, 32, 70]
+    assert bitops.mask_lt(5) == 0b11111
+
+
+def test_kernels_common_reexports_single_definitions():
+    assert common.gt_masks_np is bitops.gt_masks_np
+    assert common.popcount is bitops.popcount_words
+    assert common.unpack_bits is bitops.unpack_bits
+    assert common.bit_at is bitops.bit_at
+    assert common.num_words is bitops.num_words
+    assert common.WORD == bitops.WORD

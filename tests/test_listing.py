@@ -1,0 +1,250 @@
+"""Emission subsystem: listing kernel vs oracle, host/jax backend parity,
+device-count/staging invariance, overflow -> host spill, sink API.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to exercise
+the multi-device emit dispatch (the CI matrix does both 1 and 4).
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_graph
+from repro.core import ebbkc, listing, oracle, pipeline
+from repro.core.bitops import pack_mask, pack_rows
+from repro.core.engine_np import Stats
+from repro.data import rmat_graph
+from repro.kernels import ops
+
+N_DEV = jax.device_count()
+
+
+def as_rows(arr):
+    return list(map(tuple, arr.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [32, 64])
+@pytest.mark.parametrize("l", [1, 2, 3, 4])
+def test_list_kernel_matches_oracle_with_capacity_sweep(T, l):
+    rng = np.random.default_rng(T * 10 + l)
+    tiles = []
+    for _ in range(4):
+        g = random_graph(rng, n_lo=4, n_hi=min(T, 16), p_lo=0.3, p_hi=0.9)
+        rows = [0] * g.n
+        for u, v in g.edges.tolist():
+            rows[u] |= 1 << v
+            rows[v] |= 1 << u
+        tiles.append((g, rows))
+    A = np.stack([pack_rows(rows, T) for _, rows in tiles])
+    cand = np.stack([pack_mask((1 << g.n) - 1, T) for g, _ in tiles])
+    exp = [sorted(oracle.list_kcliques_brute(g, l)) for g, _ in tiles]
+    for cap in (1, 3, max(max(map(len, exp)), 1)):
+        bufs, cnt, ovf = ops.list_tiles(
+            np.asarray(A), np.asarray(cand), l, capacity=cap, interpret=True
+        )
+        bufs, cnt, ovf = np.asarray(bufs), np.asarray(cnt), np.asarray(ovf)
+        for b, want in enumerate(exp):
+            # TRUE count survives overflow; flag is exact
+            assert int(cnt[b]) == len(want)
+            assert bool(ovf[b]) == (len(want) > cap)
+            got = [tuple(r) for r in bufs[b][: min(len(want), cap)].tolist()]
+            # buffer holds the DFS (lexicographic) prefix, exact-once
+            assert got == want[: min(len(want), cap)]
+
+
+def test_list_kernel_counts_match_count_kernel():
+    rng = np.random.default_rng(3)
+    g = random_graph(rng, n_lo=12, n_hi=20, p_lo=0.5, p_hi=0.9)
+    T = 32
+    rows = [0] * g.n
+    for u, v in g.edges.tolist():
+        rows[u] |= 1 << v
+        rows[v] |= 1 << u
+    A = np.asarray(pack_rows(rows, T)[None])
+    cand = np.asarray(pack_mask((1 << g.n) - 1, T)[None])
+    for l in (1, 2, 3, 4):
+        counts = np.asarray(ops.count_tiles(A, cand, l, interpret=True))
+        _, cnt, _ = ops.list_tiles(A, cand, l, capacity=4, interpret=True)
+        assert counts.tolist() == np.asarray(cnt).tolist()
+
+
+# ---------------------------------------------------------------------------
+# property: both backends equal the brute-force clique SET (the satellite)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000), st.integers(3, 6))
+@settings(max_examples=10, deadline=None)
+def test_listing_equals_oracle_set_all_orderings(seed, k):
+    """host and jax backends emit exactly the oracle's clique set --
+    exact-once, members sorted -- for every ordering, including truncated
+    ``max_out`` prefixes."""
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng)
+    exp = sorted(oracle.list_kcliques_brute(g, k))
+    for order in ("hybrid", "truss", "color"):
+        for backend in ("host", "jax"):
+            got, _ = ebbkc.list_cliques(g, k, order=order, backend=backend)
+            rows = as_rows(got)
+            assert sorted(rows) == exp, (order, backend, k)
+            assert len(set(rows)) == len(rows)  # exact-once
+            assert all(list(r) == sorted(r) for r in rows)  # sorted members
+            cap = max(1, len(exp) // 2)
+            part, _ = ebbkc.list_cliques(
+                g, k, order=order, backend=backend, max_out=cap
+            )
+            prows = as_rows(part)
+            assert len(prows) == min(cap, len(exp)), (order, backend)
+            assert set(prows) <= set(exp)
+            assert len(set(prows)) == len(prows)
+
+
+# ---------------------------------------------------------------------------
+# engine level: device-count / staging / batch-size invariance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", ["truss", "hybrid", "color"])
+def test_listing_invariant_to_devices_and_staging(order):
+    g = rmat_graph(7, 4, seed=7)
+    for k in (4, 5):
+        host, _ = ebbkc.list_cliques(g, k, order=order)
+        base, _ = ebbkc.list_cliques(g, k, order=order, backend="jax")
+        assert sorted(as_rows(base)) == sorted(as_rows(host)), (order, k)
+        for kwargs in (
+            dict(devices=1),
+            dict(devices=N_DEV),
+            dict(devices=N_DEV, async_staging=False),
+            dict(devices=N_DEV, batch_size=16),
+            dict(batch_size=16),
+        ):
+            got, st = ebbkc.list_cliques(
+                g, k, order=order, backend="jax", engine_kwargs=kwargs
+            )
+            # not just the same set: the SAME deterministic batch order
+            assert np.array_equal(got, base), (order, k, kwargs)
+            assert st.emitted_cliques == len(base)
+
+
+def test_multi_device_emit_accounts_devices():
+    g = rmat_graph(8, 4, seed=7)
+    k = 4
+    got, st = ebbkc.list_cliques(
+        g, k, backend="jax", engine_kwargs=dict(devices=N_DEV, batch_size=16)
+    )
+    host, _ = ebbkc.list_cliques(g, k)
+    assert sorted(as_rows(got)) == sorted(as_rows(host))
+    assert sum(st.device_tiles.values()) > 0
+    assert set(st.device_flops) == set(st.device_tiles)
+    if N_DEV > 1:
+        assert len(st.device_tiles) > 1  # work actually spread
+
+
+# ---------------------------------------------------------------------------
+# overflow -> host spill (never truncate), oversize spill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("devices", [None, "dispatch"])
+def test_emit_overflow_spills_to_host_never_truncates(devices):
+    g = rmat_graph(7, 4, seed=7)
+    k = 4
+    host, _ = ebbkc.list_cliques(g, k)
+    kwargs = dict(capacity=2)
+    if devices == "dispatch":
+        kwargs["devices"] = N_DEV
+    got, st = ebbkc.list_cliques(g, k, backend="jax", engine_kwargs=kwargs)
+    assert sorted(as_rows(got)) == sorted(as_rows(host))
+    assert st.overflowed_tiles > 0
+    assert st.emitted_cliques == len(host)
+
+
+def test_max_capacity_cap_bounds_buffer_and_spills():
+    g = rmat_graph(7, 4, seed=7)
+    k = 4
+    host, _ = ebbkc.list_cliques(g, k)
+    kwargs = dict(max_capacity=4)
+    got, st = ebbkc.list_cliques(g, k, backend="jax", engine_kwargs=kwargs)
+    assert sorted(as_rows(got)) == sorted(as_rows(host))
+    assert st.overflowed_tiles > 0
+
+
+def test_oversize_tiles_spill_to_host_listing(rng):
+    g = random_graph(rng, n_lo=42, n_hi=48, p_lo=0.96, p_hi=0.99)
+    k = 4
+    host, _ = ebbkc.list_cliques(g, k)
+    kwargs = dict(bins=(32,))
+    got, st = ebbkc.list_cliques(g, k, backend="jax", engine_kwargs=kwargs)
+    assert sorted(as_rows(got)) == sorted(as_rows(host))
+    assert st.spilled_tiles > 0
+    assert all(s > 32 for s in st.spill_sizes)
+
+
+# ---------------------------------------------------------------------------
+# sinks and accounting
+# ---------------------------------------------------------------------------
+
+
+def test_array_sink_bounds_and_accounts():
+    sink = listing.ArraySink(3, max_out=5)
+    a = np.arange(12, dtype=np.int64).reshape(4, 3)
+    assert sink.emit(a) == 4 and not sink.full
+    assert sink.emit(a) == 1 and sink.full
+    assert sink.emit(a) == 0
+    assert sink.result().shape == (5, 3)
+    assert sink.accepted == 5
+    assert sink.bytes_written == 5 * 3 * 8
+
+
+def test_callback_sink_streams_chunks():
+    chunks = []
+    sink = listing.CallbackSink(chunks.append)
+    a = np.ones((2, 4), dtype=np.int64)
+    assert sink.emit(a) == 2
+    assert sink.emit(np.zeros((0, 4), dtype=np.int64)) == 0
+    assert len(chunks) == 1 and chunks[0].shape == (2, 4)
+
+
+def test_npz_sink_roundtrip(tmp_path):
+    path = str(tmp_path / "cliques.npz")
+    g = rmat_graph(6, 4, seed=7)
+    k = 4
+    sink = listing.NpzSink(path, k)
+    res = listing.stream_cliques(g, k, sink)
+    sink.close()
+    host, _ = ebbkc.list_cliques(g, k)
+    saved = np.load(path)["cliques"]
+    assert sorted(as_rows(saved)) == sorted(as_rows(host))
+    assert res.stats.emitted_cliques == len(host)
+    assert res.stats.sink_bytes == saved.nbytes
+
+
+def test_stream_cliques_rejects_small_k():
+    g = rmat_graph(5, 3, seed=7)
+    with pytest.raises(ValueError):
+        listing.stream_cliques(g, 2, listing.ArraySink(2))
+
+
+def test_decode_batch_roundtrip():
+    """TileBatch.verts + kernel buffers decode to the host tile listing."""
+    g = rmat_graph(6, 4, seed=7)
+    k = 4
+    stats = Stats()
+    host, _ = ebbkc.list_cliques(g, k)
+    rows = []
+    for item in pipeline.stream_batches(g, k, order="hybrid"):
+        assert isinstance(item, pipeline.TileBatch)
+        assert item.verts.shape == (item.B, item.T)
+        sizes = item.sizes.astype(np.int64)
+        for b in range(item.B):
+            members = item.verts[b, : sizes[b]]
+            assert ((members >= 0) & (members < g.n)).all()
+        arr = listing.list_batch(item, k - 2, stats, interpret=True)
+        rows.extend(as_rows(arr))
+    assert sorted(rows) == sorted(as_rows(host))

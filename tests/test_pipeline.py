@@ -85,6 +85,12 @@ def test_batcher_shape_and_coverage_invariants(rng):
         assert item.sizes.shape == (B,) and item.nedges.shape == (B,)
         assert item.anchors.shape == (B, 2)
         assert (item.sizes <= T).all() and (item.sizes > 0).all()
+        # decode table for the emission subsystem: valid global vertex
+        # ids in every live slot, zero padding beyond sizes
+        assert item.verts.shape == (B, T)
+        live = np.arange(T)[None, :] < item.sizes[:, None]
+        assert ((item.verts >= 0) & (item.verts < g.n))[live].all()
+        assert (item.verts[~live] == 0).all()
         seen += B
     assert seen == n_ref
 
