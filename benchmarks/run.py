@@ -273,26 +273,37 @@ def bench_pipeline_stages():
 # ---------------------------------------------------------------------------
 
 def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
-                   out_json=None, with_listing=False, baseline=None):
-    """Sweep `engine_jax.count(devices=n)` over device counts.
+                   out_json=None, with_listing=False, baseline=None,
+                   backends=("auto",)):
+    """Sweep `engine_jax.count(devices=n)` over device counts x backends.
 
     Times front-end-to-finish (extract + pack + device + combine, plan
-    prebuilt) per device count with double-buffered staging, emits the
-    speedup vs the 1-device baseline, and verifies every device count
+    prebuilt) per (backend, device count) with double-buffered staging,
+    emits the speedup vs the 1-device baseline, and verifies every cell
     produces the identical clique count -- any mismatch exits non-zero
     (the CI bench-smoke gate).
 
     With ``with_listing`` the sweep also runs the emission subsystem per
-    (k, devices): listing throughput in cliques/s plus the emission stats
-    (emitted/overflowed/sink bytes), parity-checked against the count.
-    ``baseline`` (a previously committed JSON, e.g. BENCH_pr3.json) diffs
-    every matching record's count/emitted against this run -- a count
-    regression fails loudly (non-zero exit).
+    (k, devices, backend): end-to-end listing throughput in cliques/s
+    PLUS a kernel-stage-only row (``kernel_seconds`` = device wall time
+    from ``stage_times``, i.e. excluding extract/pack/decode), so device
+    time is attributable separately from staging.  ``baseline`` (a
+    previously committed JSON, e.g. BENCH_pr4.json) diffs every matching
+    record's count/emitted against this run -- a count regression fails
+    loudly (non-zero exit).
     """
     import jax
     from repro.core import ebbkc, engine_jax, pipeline
     from repro.launch.clique import load_graph
     from repro.runtime.dispatch import resolve_devices
+
+    import time as _time
+
+    import jax.numpy as jnp
+    import numpy as _np
+    from repro.core import listing as listing_mod
+    from repro.core import tiles as tiles_mod
+    from repro.kernels import ops as kops
 
     counts = sorted(set(device_counts or {1, jax.device_count()}))
     if counts[0] != 1:
@@ -303,59 +314,146 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
     plan = pipeline.build_plan(g, order="hybrid")
     records = []
     mismatches = []
+
+    def kernel_stage_listing(k, backend):
+        """Pure device-stage listing throughput: pre-staged arrays, warmed
+        jit caches, time ONLY the listing-kernel calls (the count pass
+        that sizes the buffers is reported separately as sizing_s) --
+        device time attributable apart from extract/pack/decode."""
+        l = k - 2
+        staged = []
+        for item in pipeline.stream_batches(plan, k, order="hybrid"):
+            if isinstance(item, tiles_mod.Tile):
+                continue  # oversize spills are host work, not kernel stage
+            staged.append((jnp.asarray(item.A), jnp.asarray(item.cand)))
+        t0 = _time.perf_counter()
+        caps = []
+        emitted = 0
+        for A, cand in staged:
+            cnt = _np.asarray(kops.count_tiles(A, cand, l, backend=backend))
+            caps.append(listing_mod.capacity_for(cnt, listing_mod.MAX_CAPACITY))
+            emitted += int(cnt.sum())
+        sizing_s = _time.perf_counter() - t0
+        for (A, cand), cap in zip(staged, caps):  # warmup: compile all sigs
+            jax.block_until_ready(
+                kops.list_tiles(A, cand, l, capacity=cap, backend=backend))
+        kernel_s = float("inf")
+        for _ in range(2):  # best of 2 (shared CI/container noise)
+            t0 = _time.perf_counter()
+            outs = [
+                kops.list_tiles(A, cand, l, capacity=cap, backend=backend)
+                for (A, cand), cap in zip(staged, caps)
+            ]
+            jax.block_until_ready(outs)
+            kernel_s = min(kernel_s, _time.perf_counter() - t0)
+        # drain first-call compile seconds accrued by the eager kernel
+        # calls above so they are not misattributed to the next engine
+        # record's kernel_compile_s
+        kops.consume_compile_s()
+        return emitted, kernel_s, sizing_s, len(staged)
     for k in ks:
-        base_t = None
         ref_count = None
-        for n in counts:
-            used = len(resolve_devices(n))
-            r, t = timed(engine_jax.count, g, k, plan=plan, devices=n,
-                         interpret=True, repeat=2)
-            if base_t is None:
-                base_t = t
-            if ref_count is None:
-                ref_count = r.count
-            elif r.count != ref_count:
-                mismatches.append((k, n, r.count, ref_count))
-            speedup = base_t / max(t, 1e-9)
-            emit(f"dispatch/{gname}/k{k}/dev{n}", t,
-                 f"count={r.count};tiles={r.tiles};devices_used={used};"
-                 f"overlap_s={r.stats.staging_overlap_s:.3f};"
-                 f"speedup_vs_dev1={speedup:.2f}")
-            records.append({
-                "kind": "count",
-                "graph": graph_spec, "k": k, "devices": n,
-                "devices_used": used, "seconds": t, "count": r.count,
-                "tiles": r.tiles, "spilled": r.stats.spilled_tiles,
-                "staging_overlap_s": r.stats.staging_overlap_s,
-                "speedup_vs_dev1": speedup,
-            })
-            if not with_listing:
-                continue
-            def run_listing():
-                return ebbkc.list_cliques(
-                    g, k, backend="jax", plan=plan,
-                    engine_kwargs=dict(devices=n))
-            (_, lst), t_l = timed(run_listing)
-            if lst.emitted_cliques != ref_count:
-                mismatches.append((k, n, lst.emitted_cliques, ref_count))
-            rate = lst.emitted_cliques / max(t_l, 1e-9)
-            emit(f"listing/{gname}/k{k}/dev{n}", t_l,
-                 f"emitted={lst.emitted_cliques};"
-                 f"cliques_per_s={rate:.0f};"
-                 f"overflowed={lst.overflowed_tiles};"
-                 f"sink_bytes={lst.sink_bytes}")
-            records.append({
-                "kind": "listing",
-                "graph": graph_spec, "k": k, "devices": n,
-                "devices_used": used, "seconds": t_l,
-                "count": lst.emitted_cliques,
-                "cliques_per_s": rate,
-                "overflowed_tiles": lst.overflowed_tiles,
-                "sink_bytes": lst.sink_bytes,
-            })
+        for backend in backends:
+            base_t = None
+            for n in counts:
+                used = len(resolve_devices(n))
+                # cold pass carries whatever compile this cell actually
+                # pays (first-call signatures are process-wide, so later
+                # cells legitimately report ~0); warm pass gives the
+                # steady-state stage breakdown, timing is best of the two
+                r_cold, t_cold = timed(engine_jax.count, g, k, plan=plan,
+                                       devices=n, backend=backend)
+                compile_s = r_cold.stats.kernel_compile_s
+                stage = {}
+                r, t_warm = timed(engine_jax.count, g, k, plan=plan,
+                                  devices=n, backend=backend,
+                                  stage_times=stage)
+                t = min(t_cold, t_warm)
+                if base_t is None:
+                    base_t = t
+                if ref_count is None:
+                    ref_count = r.count
+                elif r.count != ref_count:
+                    mismatches.append((k, n, r.count, ref_count))
+                speedup = base_t / max(t, 1e-9)
+                dev_s = stage.get("device", 0.0)
+                emit(f"dispatch/{gname}/k{k}/{backend}/dev{n}", t,
+                     f"count={r.count};tiles={r.tiles};devices_used={used};"
+                     f"kernel_s={dev_s:.3f};"
+                     f"overlap_s={r.stats.staging_overlap_s:.3f};"
+                     f"compile_s={compile_s:.3f};"
+                     f"speedup_vs_dev1={speedup:.2f}")
+                records.append({
+                    "kind": "count", "backend": backend,
+                    "graph": graph_spec, "k": k, "devices": n,
+                    "devices_used": used, "seconds": t, "count": r.count,
+                    "kernel_seconds": dev_s,
+                    "tiles": r.tiles, "spilled": r.stats.spilled_tiles,
+                    "staging_overlap_s": r.stats.staging_overlap_s,
+                    "kernel_compile_s": compile_s,
+                    "speedup_vs_dev1": speedup,
+                })
+                if not with_listing:
+                    continue
+                stage_l = {}
+
+                def run_listing():
+                    return ebbkc.list_cliques(
+                        g, k, backend="jax", plan=plan,
+                        engine_kwargs=dict(devices=n, backend=backend,
+                                           stage_times=stage_l))
+                # best of 2 like the count sweep: the serving model pays
+                # kernel compiles once per process, not per query
+                (_, lst), t_l = timed(run_listing, repeat=2)
+                if lst.emitted_cliques != ref_count:
+                    mismatches.append((k, n, lst.emitted_cliques, ref_count))
+                rate = lst.emitted_cliques / max(t_l, 1e-9)
+                # kernel-stage-only throughput: the device seconds actually
+                # spent producing (count, overflow, buffer) triples --
+                # attributable separately from staging/pack/decode (stage
+                # dict accumulates over both repeats)
+                kern_s = stage_l.get("device", 0.0) / 2
+                kern_rate = lst.emitted_cliques / max(kern_s, 1e-9)
+                emit(f"listing/{gname}/k{k}/{backend}/dev{n}", t_l,
+                     f"emitted={lst.emitted_cliques};"
+                     f"cliques_per_s={rate:.0f};"
+                     f"kernel_s={kern_s:.3f};"
+                     f"kernel_cliques_per_s={kern_rate:.0f};"
+                     f"overflowed={lst.overflowed_tiles};"
+                     f"sink_bytes={lst.sink_bytes}")
+                records.append({
+                    "kind": "listing", "backend": backend,
+                    "graph": graph_spec, "k": k, "devices": n,
+                    "devices_used": used, "seconds": t_l,
+                    "count": lst.emitted_cliques,
+                    "cliques_per_s": rate,
+                    "kernel_seconds": kern_s,
+                    "kernel_cliques_per_s": kern_rate,
+                    "overflowed_tiles": lst.overflowed_tiles,
+                    "sink_bytes": lst.sink_bytes,
+                })
+                if n != 1:
+                    continue
+                # kernel-stage-only row: device listing time in isolation
+                # (emitted may undershoot ref_count when oversize tiles
+                # spill to the host -- spills are not kernel-stage work)
+                emitted_k, ks_s, sz_s, nb = kernel_stage_listing(k, backend)
+                ks_rate = emitted_k / max(ks_s, 1e-9)
+                emit(f"listing_kernel/{gname}/k{k}/{backend}/dev1", ks_s,
+                     f"emitted={emitted_k};batches={nb};"
+                     f"kernel_cliques_per_s={ks_rate:.0f};"
+                     f"sizing_s={sz_s:.3f}")
+                records.append({
+                    "kind": "listing_kernel", "backend": backend,
+                    "graph": graph_spec, "k": k, "devices": 1,
+                    "devices_used": 1, "seconds": ks_s,
+                    "count": emitted_k, "batches": nb,
+                    "kernel_cliques_per_s": ks_rate,
+                    "sizing_seconds": sz_s,
+                })
     if out_json:
         payload = {"graph": graph_spec, "ks": list(ks),
-                   "device_counts": counts,
+                   "device_counts": counts, "backends": list(backends),
                    "parity": not mismatches, "records": records}
         with open(out_json, "w") as f:
             json.dump(payload, f, indent=1)
@@ -374,11 +472,13 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
 def diff_against_baseline(records, baseline_path):
     """Compare this run's counts against a committed baseline JSON.
 
-    Matches records on (kind, graph, k, devices) and flags any count
-    disagreement -- the regression gate of the CI bench-smoke job (the
-    committed baseline is BENCH_pr3.json).  Records present on only one
-    side are counted in the summary line but not fatal (the suites may
-    differ in scope).
+    Matches records on (kind, graph, k, devices) -- counts must agree
+    across backends by construction, so the backend is deliberately NOT
+    part of the key: a lax run is diffed against a pallas-era baseline and
+    vice versa.  Any count disagreement is flagged -- the regression gate
+    of the CI bench-smoke job (the committed baseline is BENCH_pr4.json).
+    Records present on only one side are counted in the summary line but
+    not fatal (the suites may differ in scope).
     """
     with open(baseline_path) as f:
         base = json.load(f)["records"]
@@ -494,9 +594,13 @@ def main() -> None:
                     help="write dispatch-sweep records to this JSON file")
     ap.add_argument("--list", action="store_true", dest="with_listing",
                     help="also benchmark the emission subsystem per "
-                         "(k, devices): cliques/s + emission stats")
+                         "(k, devices, backend): e2e + kernel-stage "
+                         "cliques/s + emission stats")
+    ap.add_argument("--backend", default="auto",
+                    help="comma list of kernel backends to sweep "
+                         "(auto/pallas/lax/autotune), e.g. lax,pallas")
     ap.add_argument("--baseline", default=None,
-                    help="committed baseline JSON (e.g. BENCH_pr3.json); "
+                    help="committed baseline JSON (e.g. BENCH_pr4.json); "
                          "any count mismatch vs matching records exits "
                          "non-zero")
     args = ap.parse_args()
@@ -511,7 +615,8 @@ def main() -> None:
         ks = tuple(int(x) for x in args.k.split(","))
         bench_dispatch(graph_spec=args.graph, ks=ks, device_counts=counts,
                        out_json=args.json, with_listing=args.with_listing,
-                       baseline=args.baseline)
+                       baseline=args.baseline,
+                       backends=tuple(args.backend.split(",")))
         return
     wanted = set(args.benches)
     for fn in ALL:

@@ -38,11 +38,14 @@ def snapshot(i: int):
     return f"powerlaw-{i}", powerlaw_graph(2500, 10, seed=100 + i)
 
 
-def answer_query(plan, k, devices="all"):
+def answer_query(plan, k, devices="all", backend=None):
     """One k-clique query off a prebuilt plan, dispatched across all local
-    devices; returns (count, n_tiles, n_spilled, staging overlap s)."""
+    devices; returns (count, n_tiles, n_spilled, staging overlap s).
+
+    ``backend`` picks the kernel implementation (repro.kernels.ops
+    registry; default auto = compiled lax on this CPU host)."""
     r = engine_jax.count(plan.g, k, plan=plan, devices=devices,
-                         interpret=True)
+                         backend=backend)
     return r.count, r.tiles, r.stats.spilled_tiles, \
         r.stats.staging_overlap_s
 
@@ -68,11 +71,12 @@ class TopNContainingSink(listing.CliqueSink):
         return self._hits.result()
 
 
-def answer_topn_query(plan, k, v, topn, devices="all"):
+def answer_topn_query(plan, k, v, topn, devices="all", backend=None):
     """Top-N k-cliques containing vertex v, materialized off the cached
     plan through the emission subsystem; returns ((n, k) rows, stats)."""
     sink = TopNContainingSink(v, topn, k)
-    res = listing.stream_cliques(plan, k, sink, devices=devices)
+    res = listing.stream_cliques(plan, k, sink, devices=devices,
+                                 backend=backend)
     return sink.result(), res.stats
 
 
@@ -82,6 +86,10 @@ def main():
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--topn", type=int, default=5,
                     help="N for the top-N cliques-containing-v query")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "lax", "ref", "autotune"],
+                    help="kernel backend for all queries (default auto = "
+                         "compiled lax on CPU hosts)")
     ap.add_argument("--ckpt", default="/tmp/repro_clique_service")
     args = ap.parse_args()
 
@@ -99,7 +107,8 @@ def main():
         report = {}
         for k in (args.k, args.k + 1):      # two queries, one plan
             t0 = time.time()
-            total, n_tiles, n_spill, overlap = answer_query(plan, k)
+            total, n_tiles, n_spill, overlap = answer_query(
+                plan, k, backend=args.backend)
             report[k] = (total, n_tiles, n_spill, overlap, time.time() - t0)
         tau = plan.td.tau
         line = " ".join(
@@ -112,7 +121,8 @@ def main():
         # materializing query off the SAME plan: top-N cliques @ vertex v
         v = int(np.argmax(g.degrees()))
         t0 = time.time()
-        rows, lst = answer_topn_query(plan, args.k, v, args.topn)
+        rows, lst = answer_topn_query(plan, args.k, v, args.topn,
+                                      backend=args.backend)
         print(f"[{name}] top-{args.topn} {args.k}-cliques @ v={v}: "
               f"{len(rows)} found ({lst.emitted_cliques} scanned, "
               f"overflowed={lst.overflowed_tiles}, {time.time() - t0:.2f}s)"

@@ -26,6 +26,8 @@ for k in (4, 5, 6):
 cliques, _ = ebbkc.list_cliques(g, 6, max_out=10)
 print("first 6-cliques:", cliques[:3].tolist())
 
-# accelerator engine (Pallas kernels in interpret mode on CPU)
-r_dev = ebbkc.count(g, 5, backend="jax", engine_kwargs={"interpret": True})
-print(f"device engine agrees: {r_dev.count == ebbkc.count(g, 5).count}")
+# accelerator engine; the kernel backend registry picks compiled jax.lax
+# off-TPU (pass engine_kwargs={"backend": "pallas"} to pin the Pallas path)
+r_dev = ebbkc.count(g, 5, backend="jax")
+print(f"device engine agrees: {r_dev.count == ebbkc.count(g, 5).count} "
+      f"(kernel backend: {r_dev.stats.backend})")

@@ -37,6 +37,7 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     if k < 1:
         raise ValueError("k >= 1 required")
     stats = Stats()
+    stats.backend = "host"
     if k == 1:
         return Result(g.n, stats)
     if k == 2:
@@ -82,6 +83,7 @@ def list_cliques(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     knobs like ``devices=`` / ``capacity=`` to ``listing.stream_cliques``.
     """
     stats = Stats()
+    stats.backend = "host"
     if k == 1:
         out = np.arange(g.n, dtype=np.int64)[:, None]
         return out[:max_out], stats

@@ -125,12 +125,15 @@ def count_2plex_closed_np(nv: np.ndarray, f: np.ndarray, l: int) -> np.ndarray:
 
 def count_packed(A: jax.Array, cand: jax.Array, l: int,
                  method: str = "auto", et: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 backend: Optional[str] = None):
     """Device step over one packed batch.
 
     Returns (hard (B,) uint32 kernel counts with 2-plex tiles masked to 0,
     nv, t, f) -- the host combines them with the exact int64 closed form.
     All-device, no int64 (TPU-friendly); jit/pjit-able as a unit.
+    ``backend`` selects the kernel implementation (see
+    :mod:`repro.kernels.ops`); ``interpret`` is the deprecated alias.
     """
     T = A.shape[1]
     B = A.shape[0]
@@ -152,9 +155,10 @@ def count_packed(A: jax.Array, cand: jax.Array, l: int,
         is2 = t <= 2
         hard = kops.count_tiles(A, jnp.where(is2[:, None], jnp.uint32(0),
                                              cand), l,
-                                method=method, interpret=interpret)
+                                method=method, backend=backend,
+                                interpret=interpret)
     else:
-        hard = kops.count_tiles(A, cand, l, method=method,
+        hard = kops.count_tiles(A, cand, l, method=method, backend=backend,
                                 interpret=interpret)
     return hard, nv, t, f
 
@@ -198,14 +202,19 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
           plan: Optional[pipeline.PipelinePlan] = None,
           batch_size: int = 256, bins: Sequence[int] = _BINS,
           stage_times: Optional[Dict[str, float]] = None,
-          devices=None, async_staging: bool = True):
+          devices=None, async_staging: bool = True,
+          backend: Optional[str] = None):
     """Full-graph k-clique count on the accelerator engine.
 
     Streams capacity-batched packed tiles from :mod:`repro.core.pipeline`;
     pass a prebuilt ``plan`` to amortize preprocessing across queries.
     Oversize tiles are counted on the host (``stats.spilled_tiles`` /
     ``stats.spill_sizes``).  ``stage_times`` (optional dict) accumulates
-    extract/pack/device/combine wall-clock seconds.
+    extract/pack/device/combine wall-clock seconds.  ``backend`` selects
+    the kernel implementation family (``repro.kernels.ops`` registry;
+    default auto = compiled lax off-TPU); the resolved name and first-call
+    compile seconds are reported in ``stats.backend`` /
+    ``stats.kernel_compile_s``.
 
     ``devices`` routes the packed batches through the multi-device
     dispatcher (:mod:`repro.runtime.dispatch`): an int n / ``"all"`` / a
@@ -217,6 +226,7 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     """
     from .ebbkc import Result
     stats = Stats()
+    stats.backend = kops.resolve_backend(backend, interpret)
     if k == 1:
         return Result(g.n, stats)
     if k == 2:
@@ -230,7 +240,8 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     if devices is not None:
         from ..runtime.dispatch import Dispatcher
         disp = Dispatcher(l, devices, et=et, method=method,
-                          interpret=interpret, async_staging=async_staging,
+                          interpret=interpret, backend=backend,
+                          async_staging=async_staging,
                           stats=stats, stage_times=stage_times)
     for item in pipeline.stream_batches(plan or g, k, order=order,
                                         use_rule2=use_rule2,
@@ -249,7 +260,7 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
         t0 = time.perf_counter()
         hard, nv, t, f = count_packed(
             jnp.asarray(item.A), jnp.asarray(item.cand), l,
-            method=method, et=et, interpret=interpret)
+            method=method, et=et, interpret=interpret, backend=backend)
         if stage_times is not None:
             # async dispatch: block so device time is not billed to combine
             jax.block_until_ready((hard, nv, t, f))
@@ -261,4 +272,5 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
                 + time.perf_counter() - t1
     if disp is not None:
         total += disp.finish()
+    stats.kernel_compile_s += kops.consume_compile_s()
     return Result(total, stats, ntiles, max_tile)

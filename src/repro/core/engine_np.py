@@ -52,6 +52,12 @@ class Stats:
     emitted_cliques: int = 0
     overflowed_tiles: int = 0
     sink_bytes: int = 0
+    # kernel backend registry (repro.kernels.ops): which backend served
+    # the query ("host" for the python-int recursion) and the wall seconds
+    # spent on first-call kernel compilation (compile + first run, one
+    # entry per (kernel, backend, shape) signature per process)
+    backend: str = ""
+    kernel_compile_s: float = 0.0
 
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:

@@ -277,17 +277,22 @@ def list_batch(
     capacity: Optional[int] = None,
     max_capacity: int = MAX_CAPACITY,
     interpret: Optional[bool] = None,
+    backend: Optional[str] = None,
     et_t: int = 3,
 ) -> np.ndarray:
     """Single-device emit step: count pass -> sized list kernel -> decode."""
     A = jnp.asarray(batch.A)
     cand = jnp.asarray(batch.cand)
     if capacity is None:
-        counts = np.asarray(kops.count_tiles(A, cand, l, interpret=interpret))
+        counts = np.asarray(
+            kops.count_tiles(A, cand, l, backend=backend, interpret=interpret)
+        )
         cap = capacity_for(counts, max_capacity)
     else:
         cap = max(1, int(capacity))
-    bufs, cnt, ovf = kops.list_tiles(A, cand, l, capacity=cap, interpret=interpret)
+    bufs, cnt, ovf = kops.list_tiles(
+        A, cand, l, capacity=cap, backend=backend, interpret=interpret
+    )
     return decode_batch(
         batch,
         np.asarray(bufs),
@@ -314,22 +319,26 @@ def stream_cliques(
     devices=None,
     async_staging: bool = True,
     interpret: Optional[bool] = None,
+    backend: Optional[str] = None,
     stage_times: Optional[dict] = None,
 ) -> ListResult:
     """List all k-cliques of ``source`` (Graph or PipelinePlan) into ``sink``.
 
     The accelerator twin of ``ebbkc.list_cliques(backend="host")``: streams
-    capacity-batched packed tiles, runs the Pallas listing kernels (sized by
-    a first count pass unless ``capacity`` pins the buffer), decodes on the
+    capacity-batched packed tiles, runs the listing kernels (sized by a
+    first count pass unless ``capacity`` pins the buffer), decodes on the
     host, and feeds the sink in deterministic stream order.  ``devices``
     routes batches through :class:`repro.runtime.dispatch.ListDispatcher`
     (per-device placement, double-buffered staging, FIFO harvest -- same
-    knobs as the counting engine).  Requires k >= 3 (the k <= 2 cases have
-    closed forms; see ``ebbkc.list_cliques``).
+    knobs as the counting engine).  ``backend`` selects the kernel
+    implementation (``repro.kernels.ops`` registry; emitted rows are
+    byte-identical across backends).  Requires k >= 3 (the k <= 2 cases
+    have closed forms; see ``ebbkc.list_cliques``).
     """
     if k < 3:
         raise ValueError("stream_cliques requires k >= 3")
     stats = Stats()
+    stats.backend = kops.resolve_backend(backend, interpret)
     res = ListResult(stats)
     l = k - 2
     disp = None
@@ -344,6 +353,7 @@ def stream_cliques(
             capacity=capacity,
             max_capacity=max_capacity,
             interpret=interpret,
+            backend=backend,
             async_staging=async_staging,
             et_t=et_t,
             stage_times=stage_times,
@@ -376,10 +386,12 @@ def stream_cliques(
             capacity=capacity,
             max_capacity=max_capacity,
             interpret=interpret,
+            backend=backend,
             et_t=et_t,
         )
         _emit(sink, arr, stats)
     if disp is not None:
         disp.finish()
     stats.sink_bytes += sink.bytes_written
+    stats.kernel_compile_s += kops.consume_compile_s()
     return res

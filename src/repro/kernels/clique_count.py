@@ -8,9 +8,15 @@ recursion becomes an explicit-stack DFS inside a ``lax.while_loop`` (TPU
 scalar core drives the loop, vector core does the (T, W) base-case math).
 
 The DFS enumerates vertices in local order (attribution by rank handled by
-the caller's ordering), descending until two levels remain; the l'==2 base
-case is the vectorized edge count popcount((A & cand) & gt)/1 over the whole
-tile -- one (T, W) VPU op instead of tau more scalar steps.
+the caller's ordering), descending until *three* levels remain; the l'==3
+base case is the closed-form triangle count of the candidate-induced
+subgraph (a (T, T, W) row-AND + popcount, see
+:func:`repro.kernels.common.triangles_within`) -- one vectorized op instead
+of a tau/2-wide scalar DFS level stepping through l'==2.  l == 3 therefore
+never enters the loop at all, and k = 5 counting (l = 3) is a single
+vectorized close per tile.  The same base-case math is shared with the
+compiled lax backend (:mod:`repro.kernels.lax_backend`), keeping the two
+backends bit-identical.
 
 VMEM footprint per program: A block T*W*4 bytes (<= 128*4*4 = 2 KiB) +
 gt mask (T, W) + stack ((l+1) * W words) -- tiny; many programs per core.
@@ -23,19 +29,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import WORD, gt_masks_np, num_words, popcount, unpack_bits
+from .common import (WORD, edges_within, gt_masks_np, num_words, popcount,
+                     triangles_within)
 
-
-def _edges_within(A, cand, gt):
-    """Vectorized edge count of the cand-induced subgraph (each pair once).
-
-    A: (T, W) uint32, cand: (W,), gt: (T, W). Returns uint32 scalar.
-    """
-    T = A.shape[0]
-    rows = A & cand[None, :] & gt            # (T, W) neighbors>v within cand
-    per_v = popcount(rows).sum(axis=-1)      # (T,)
-    vbit = unpack_bits(cand, T)              # (T,)
-    return jnp.sum(per_v * vbit).astype(jnp.uint32)
+# backward-compat alias (pre-registry name used by older call sites/tests)
+_edges_within = edges_within
 
 
 def _kernel(A_ref, cand_ref, gt_ref, out_ref, *, l: int, T: int):
@@ -48,7 +46,10 @@ def _kernel(A_ref, cand_ref, gt_ref, out_ref, *, l: int, T: int):
         out_ref[0] = popcount(cand0).sum().astype(jnp.uint32)
         return
     if l == 2:
-        out_ref[0] = _edges_within(A, cand0, gt)
+        out_ref[0] = edges_within(A, cand0, gt)
+        return
+    if l == 3:
+        out_ref[0] = triangles_within(A, cand0, gt)
         return
 
     depth0 = jnp.int32(0)
@@ -66,9 +67,9 @@ def _kernel(A_ref, cand_ref, gt_ref, out_ref, *, l: int, T: int):
         cand = stack[depth]
         remaining = l - depth
 
-        def base2(_):
-            # two levels remain: close with the vectorized edge count
-            c = _edges_within(A, cand, gt)
+        def base3(_):
+            # three levels remain: close with the vectorized triangle count
+            c = triangles_within(A, cand, gt)
             return depth - 1, stack, cursor, count + c
 
         def step(_):
@@ -102,7 +103,7 @@ def _kernel(A_ref, cand_ref, gt_ref, out_ref, *, l: int, T: int):
 
             return jax.lax.cond(v >= T, pop, advance, None)
 
-        return jax.lax.cond(remaining == 2, base2, step, None)
+        return jax.lax.cond(remaining == 3, base3, step, None)
 
     _, _, _, count = jax.lax.while_loop(
         cond, body, (depth0, stack0, cursor0, count0))

@@ -1,14 +1,21 @@
 """Pallas TPU kernel: l-clique *listing* inside dense bitset tiles.
 
-Counting (:mod:`repro.kernels.clique_count`) collapses the last two DFS
-levels into one vectorized popcount; listing cannot, because the caller
-needs the member ids of every completed clique.  This kernel family keeps
-the same explicit-stack DFS (scalar core drives a ``lax.while_loop``, VPU
-does the (T, W) set math) but descends one level further and, whenever one
-level remains, *emits*: every vertex left in the candidate bitset completes
-the current prefix, so the whole frontier is scattered into a fixed-capacity
-per-tile output buffer in a single vectorized step (no per-clique scalar
-loop).
+Counting (:mod:`repro.kernels.clique_count`) collapses the last three DFS
+levels into one closed-form triangle count; listing cannot collapse quite
+as far, because the caller needs the member ids of every completed clique.
+This kernel family keeps the same explicit-stack DFS (scalar core drives a
+``lax.while_loop``, VPU does the (T, W) set math) but closes a branch as
+soon as *two* levels remain: every edge (u, w) left in the candidate-induced
+subgraph completes the current prefix, so the whole edge frontier is
+scattered into a fixed-capacity per-tile output buffer in a single
+vectorized (T, T) step (:func:`repro.kernels.common.emit_edges`) -- no
+per-vertex scalar stepping through the deepest level.  The l <= 3 cases
+never enter the loop at all: l == 3 scatters the whole (v, u, w) triangle
+frontier of the tile in one vectorized step
+(:func:`repro.kernels.common.emit_triangles`), which makes k = 5 listing a
+single fused op per tile.  All emit index math is shared with the compiled
+lax backend (:mod:`repro.kernels.lax_backend`), so the two backends fill
+byte-identical buffers.
 
 Per tile the kernel returns
 
@@ -37,31 +44,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import WORD, gt_masks_np, num_words, popcount, unpack_bits
-
-
-def _emit_frontier(buf, count, cand, prefix, iota, *, l: int, T: int, capacity: int):
-    """Scatter every cand vertex (completing ``prefix``) into ``buf``.
-
-    Vertex v's row is ``prefix[:l-1] + [v]``; its slot is ``count`` plus its
-    rank among the set bits.  Rows past ``capacity`` are dropped by the
-    scatter (mode="drop") while ``count`` keeps the true total.
-    """
-    vbit = unpack_bits(cand, T).astype(jnp.int32)  # (T,) 0/1
-    dest = jnp.where(
-        vbit > 0,
-        count.astype(jnp.int32) + jnp.cumsum(vbit) - 1,
-        jnp.int32(capacity),  # out of bounds -> dropped
-    )
-    if l == 1:
-        rows = iota[:, None]
-    else:
-        rows = jnp.concatenate(
-            [jnp.broadcast_to(prefix[: l - 1], (T, l - 1)), iota[:, None]],
-            axis=1,
-        )
-    buf = buf.at[dest].set(rows, mode="drop")
-    return buf, count + vbit.sum().astype(jnp.uint32)
+from .common import (
+    WORD,
+    emit_edges,
+    emit_frontier,
+    emit_triangles,
+    gt_masks_np,
+    num_words,
+    popcount,
+)
 
 
 def _kernel(
@@ -71,17 +62,42 @@ def _kernel(
     A = A_ref[0]  # (T, W)
     cand0 = cand_ref[0]  # (W,)
     gt = gt_ref[...]  # (T, W)
-    iota = jax.lax.iota(jnp.int32, T)
+    buf0 = jnp.zeros((capacity, l), dtype=jnp.int32)
+    count0 = jnp.uint32(0)
+    zpfx = jnp.zeros((l,), dtype=jnp.int32)
+
+    def finish(buf, count):
+        out_ref[0] = buf
+        cnt_ref[0] = count
+        ovf_ref[0] = (count > jnp.uint32(capacity)).astype(jnp.uint32)
+
+    # l <= 3: the whole tile is one vectorized frontier scatter -- no DFS.
+    if l == 1:
+        finish(
+            *emit_frontier(buf0, count0, cand0, zpfx, l=l, T=T, capacity=capacity)
+        )
+        return
+    if l == 2:
+        finish(
+            *emit_edges(buf0, count0, A, cand0, gt, zpfx, l=l, T=T, capacity=capacity)
+        )
+        return
+    if l == 3:
+        finish(
+            *emit_triangles(
+                buf0, count0, A, cand0, gt, zpfx, l=l, T=T, capacity=capacity
+            )
+        )
+        return
 
     # stack[d] = candidate bitset at depth d; cursor[d] = next vertex to
     # try; prefix[d] = vertex chosen when descending from depth d.  Depth d
-    # has l - d levels remaining; emission happens at depth l - 1.
+    # has l - d levels remaining; the edge-frontier emit fires at depth
+    # l - 2 (two levels remaining).
     depth0 = jnp.int32(0)
     stack0 = jnp.zeros((l, W), dtype=jnp.uint32).at[0].set(cand0)
     cursor0 = jnp.zeros((l,), dtype=jnp.int32)
     prefix0 = jnp.zeros((l,), dtype=jnp.int32)
-    buf0 = jnp.zeros((capacity, l), dtype=jnp.int32)
-    count0 = jnp.uint32(0)
 
     def cond(state):
         return state[0] >= 0
@@ -92,9 +108,10 @@ def _kernel(
         remaining = l - depth
 
         def emit(_):
-            # one level remains: the whole frontier completes the prefix
-            b2, c2 = _emit_frontier(
-                buf, count, cand, prefix, iota, l=l, T=T, capacity=capacity
+            # two levels remain: every edge of the candidate-induced
+            # subgraph completes the prefix -- one vectorized scatter
+            b2, c2 = emit_edges(
+                buf, count, A, cand, gt, prefix, l=l, T=T, capacity=capacity
             )
             return depth - 1, stack, cursor, prefix, b2, c2
 
@@ -136,14 +153,12 @@ def _kernel(
 
             return jax.lax.cond(v >= T, pop, advance, None)
 
-        return jax.lax.cond(remaining == 1, emit, step, None)
+        return jax.lax.cond(remaining == 2, emit, step, None)
 
     _, _, _, _, buf, count = jax.lax.while_loop(
         cond, body, (depth0, stack0, cursor0, prefix0, buf0, count0)
     )
-    out_ref[0] = buf
-    cnt_ref[0] = count
-    ovf_ref[0] = (count > jnp.uint32(capacity)).astype(jnp.uint32)
+    finish(buf, count)
 
 
 @functools.partial(jax.jit, static_argnames=("l", "capacity", "interpret"))

@@ -4,6 +4,14 @@ The bit-manipulation primitives live in :mod:`repro.core.bitops` (one
 module, one test); this module re-exports them under the names the kernels
 historically used (``popcount`` here is the *traced* per-word popcount)
 plus the kernel-only combinatorics table.
+
+This module is also the single home of the *base-case set math* shared by
+the Pallas kernels (:mod:`repro.kernels.clique_count` /
+:mod:`repro.kernels.clique_list`) and the compiled lax backend
+(:mod:`repro.kernels.lax_backend`): the vectorized edge / triangle counts
+of a candidate-induced subgraph and the fixed-capacity emit scatters.
+Sharing one definition is what makes the backends byte-identical -- the
+listing buffers are filled by the exact same index arithmetic everywhere.
 """
 
 from __future__ import annotations
@@ -18,6 +26,188 @@ from ..core.bitops import (  # noqa: F401  (re-exported kernel API)
     unpack_bits,
 )
 from ..core.bitops import popcount_words as popcount  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# vectorized base-case closes (traced; shared by Pallas and lax backends)
+# ---------------------------------------------------------------------------
+
+
+def member_rows(A, cand):
+    """Rows of the cand-induced subgraph: A[v] & cand, zeroed for v not in
+    cand.  A: (T, W) uint32, cand: (W,).  Returns (T, W) uint32."""
+    import jax.numpy as jnp
+
+    T = A.shape[0]
+    vbit = unpack_bits(cand, T)                  # (T,)
+    rows = A & cand[None, :]
+    return jnp.where(vbit[:, None] > 0, rows, jnp.uint32(0))
+
+
+def edges_within(A, cand, gt):
+    """Vectorized edge count of the cand-induced subgraph (each pair once).
+
+    A: (T, W) uint32, cand: (W,), gt: (T, W). Returns uint32 scalar.
+    """
+    import jax.numpy as jnp
+
+    T = A.shape[0]
+    rows = A & cand[None, :] & gt                # (T, W) neighbors>v in cand
+    per_v = popcount(rows).sum(axis=-1)          # (T,)
+    vbit = unpack_bits(cand, T)                  # (T,)
+    return jnp.sum(per_v * vbit).astype(jnp.uint32)
+
+
+def triangles_within(A, cand, gt):
+    """Vectorized triangle count of the cand-induced subgraph (each once).
+
+    The l'==3 base-case close: every triangle v<u<w is attributed to its
+    edge (v, u) and counted as |N(v) & N(u) & cand & gt(u)| -- one
+    (T, T, W) word-AND + popcount instead of a tau/2-wide scalar DFS level.
+    A: (T, W) uint32, cand: (W,), gt: (T, W).  Returns uint32 scalar.
+    """
+    import jax.numpy as jnp
+
+    T = A.shape[0]
+    rows = member_rows(A, cand)                  # (T, W)
+    # [v, u] -> packed {w : w in N(v) & N(u) & cand, w > u}
+    pair = rows[:, None, :] & rows[None, :, :] & gt[None, :, :]
+    cnt = popcount(pair).sum(-1).astype(jnp.uint32)   # (T, T)
+    adj = unpack_bits(rows & gt, T)              # (T, T): edge v<u in cand
+    return (adj * cnt).sum().astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity emit scatters (traced; shared by Pallas and lax listing)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_rows(buf, count, flat, coords, prefix, npfx: int, capacity: int):
+    """Scatter rows ``prefix[:npfx] + coords_i`` for every set flat[i].
+
+    flat: (N,) int32 0/1 emission mask in lexicographic row order;
+    coords: list of (N,) int32 coordinate columns completing the prefix.
+    Rows land at ``count + rank``; ranks past ``capacity`` are dropped by
+    the scatter (mode="drop") while the returned count keeps the true
+    total -- the overflow contract of the listing kernels.
+    """
+    import jax.numpy as jnp
+
+    N = flat.shape[0]
+    dest = jnp.where(
+        flat > 0,
+        count.astype(jnp.int32) + jnp.cumsum(flat) - 1,
+        jnp.int32(capacity),  # out of bounds -> dropped
+    )
+    cols = [jnp.broadcast_to(prefix[:npfx], (N, npfx))] if npfx else []
+    cols.extend(c[:, None] for c in coords)
+    rows = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
+    buf = buf.at[dest].set(rows, mode="drop")
+    return buf, count + flat.sum().astype(jnp.uint32)
+
+
+def emit_frontier(buf, count, cand, prefix, *, l: int, T: int, capacity: int):
+    """l'==1 close: every cand vertex completes the prefix (one column)."""
+    import jax
+    import jax.numpy as jnp
+
+    vbit = unpack_bits(cand, T).astype(jnp.int32)     # (T,)
+    iota = jax.lax.iota(jnp.int32, T)
+    return _scatter_rows(buf, count, vbit, [iota], prefix, l - 1, capacity)
+
+
+def emit_edges(buf, count, A, cand, gt, prefix, *, l: int, T: int,
+               capacity: int):
+    """l'==2 close: every edge (u, w), u<w, of the cand-induced subgraph
+    completes the prefix -- a (T, T) dense mask, flattened in lex order."""
+    import jax
+    import jax.numpy as jnp
+
+    rows = member_rows(A, cand)
+    e = unpack_bits(rows & gt, T).astype(jnp.int32)   # (T, T) edge u<w
+    iota = jax.lax.iota(jnp.int32, T)
+    u = jnp.broadcast_to(iota[:, None], (T, T)).reshape(-1)
+    w = jnp.broadcast_to(iota[None, :], (T, T)).reshape(-1)
+    return _scatter_rows(buf, count, e.reshape(-1), [u, w], prefix, l - 2,
+                         capacity)
+
+
+def emit_triangles(buf, count, A, cand, gt, prefix, *, l: int, T: int,
+                   capacity: int):
+    """Whole-tile triangle emit: every triangle (v, u, w), v<u<w, of the
+    cand-induced subgraph completes the prefix, in lexicographic order.
+
+    Output-sensitive *gather* formulation, O(T^2 W + capacity) instead of
+    the dense O(T^3) lex mask: triangle ranks come from a T^2 cumsum of
+    per-edge completion counts (the packed (T, T, W) pair intersection,
+    never unpacked), and each of the ``capacity`` output slots *gathers*
+    its rank-r triangle -- pair via searchsorted over the rank prefix, w
+    via word-level prefix + in-word select-by-rank.  Work therefore scales
+    with the buffer actually produced, not with bin-width^3 (tiles sit in
+    pow2 bins up to 8x wider than their vertex count).
+
+    Contract: called once per tile top level with ``count == 0`` and an
+    all-zero ``buf`` (the l >= 4 DFS closes with :func:`emit_edges`
+    instead).  Returns the filled (capacity, l) buffer (rows past
+    min(total, capacity) stay zero) and the TRUE triangle total.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    W = num_words(T)
+    rows = member_rows(A, cand)
+    edge_vu = unpack_bits(rows & gt, T)                          # (T, T)
+    pair = rows[:, None, :] & rows[None, :, :] & gt[None, :, :]  # (T, T, W)
+    pair = jnp.where(edge_vu[:, :, None] > 0, pair, jnp.uint32(0))
+    wcnt = popcount(pair).astype(jnp.int32)                      # (T, T, W)
+    flat_cnt = wcnt.sum(-1).reshape(-1)                          # (T*T,)
+    base = jnp.cumsum(flat_cnt)                                  # inclusive
+    total = base[-1]
+    # rank -> pair map without a log-factor search: scatter each nonempty
+    # pair's index at its first rank, then running-max fills the segment
+    # (starts are strictly increasing across nonempty pairs)
+    starts = base - flat_cnt                                     # exclusive
+    pids = jnp.arange(T * T, dtype=jnp.int32)
+    slot_at = jnp.where(flat_cnt > 0, starts, jnp.int32(capacity))
+    p = jnp.zeros((capacity,), dtype=jnp.int32).at[slot_at].max(
+        pids, mode="drop")
+    p = jax.lax.cummax(p)                                        # (cap,)
+    ranks = jnp.arange(capacity, dtype=jnp.int32)
+    k = ranks - starts[p]                        # rank within the pair
+    v = p // T
+    u = p % T
+    words = pair.reshape(T * T, W)[p]                            # (cap, W)
+    if W == 1:
+        kw = k
+        wrd = jnp.zeros_like(k)
+        word = words[:, 0]
+    else:
+        wc = popcount(words).astype(jnp.int32)
+        wbase = jnp.cumsum(wc, axis=-1) - wc                     # exclusive
+        # containing word: last j with wbase[j] <= k (empty words collapse)
+        wrd = jnp.sum((wbase <= k[:, None]).astype(jnp.int32), -1) - 1
+        kw = k - jnp.take_along_axis(wbase, wrd[:, None], axis=-1)[:, 0]
+        word = jnp.take_along_axis(words, wrd[:, None], axis=-1)[:, 0]
+    # (kw+1)-th set bit of ``word``: branchless 5-step binary select over
+    # popcount halves (garbage past the true count; masked below)
+    pos = jnp.zeros_like(kw)
+    w32 = word
+    for half in (16, 8, 4, 2, 1):
+        low = w32 & jnp.uint32((1 << half) - 1)
+        c = popcount(low).astype(jnp.int32)
+        go = kw >= c
+        kw = kw - jnp.where(go, c, 0)
+        pos = pos + jnp.where(go, half, 0)
+        w32 = jnp.where(go, w32 >> jnp.uint32(half), low)
+    w = wrd * WORD + pos
+    valid = ranks < jnp.minimum(total, jnp.int32(capacity))
+    npfx = l - 3
+    cols = ([jnp.broadcast_to(prefix[:npfx], (capacity, npfx))]
+            if npfx else [])
+    cols.extend(c[:, None] for c in (v, u, w))
+    out = jnp.concatenate(cols, axis=1)
+    out = jnp.where(valid[:, None], out, buf)
+    return out, count + total.astype(jnp.uint32)
 
 
 def pascal_table(nmax: int) -> np.ndarray:

@@ -54,6 +54,11 @@ def main():
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--devices", default="all",
                     help='"all" or device count (clamped to available)')
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "lax", "ref", "autotune"],
+                    help="kernel backend (repro.kernels.ops registry); "
+                         "default auto = compiled lax off-TPU, Mosaic "
+                         "Pallas on TPU; also settable via REPRO_BACKEND")
     ap.add_argument("--shard-map", action="store_true",
                     help="shard each batch over a device mesh instead of "
                          "LPT-placing whole batches on devices")
@@ -98,6 +103,7 @@ def main():
         res = listing.stream_cliques(
             plan, args.k, sink, order=args.order,
             batch_size=args.batch_size, devices=devices,
+            backend=args.backend,
             async_staging=not args.sync_staging)
         t_list = time.time() - t0
         sink.close()
@@ -108,7 +114,8 @@ def main():
               f"{st.sink_bytes} sink bytes"
               f"{', -> ' + args.sink if args.sink else ''})")
         print(f"tiles={res.tiles} spilled={st.spilled_tiles} "
-              f"overflowed={st.overflowed_tiles} devices={n_dev}")
+              f"overflowed={st.overflowed_tiles} devices={n_dev} "
+              f"backend={st.backend} compile={st.kernel_compile_s:.2f}s")
         if args.verify:
             ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
             want = ref if args.max_out is None else min(args.max_out, ref)
@@ -138,12 +145,12 @@ def main():
                 n_tiles += item.B
         n_batches = len(batches)
         got, info = dispatch_scheduled(
-            batches, l, devices, mesh=mesh,
+            batches, l, devices, mesh=mesh, backend=args.backend,
             async_staging=not args.sync_staging, stats=stats)
         total += got
     else:
         # streaming: pack(i+1) on the host overlaps kernel(i) on devices
-        disp = Dispatcher(l, devices, mesh=mesh,
+        disp = Dispatcher(l, devices, mesh=mesh, backend=args.backend,
                           async_staging=not args.sync_staging, stats=stats)
         total = 0
         for item in stream:
@@ -169,7 +176,8 @@ def main():
         f"d{d}:{stats.device_tiles[d]}t/{stats.device_flops[d] / 1e6:.0f}MF"
         for d in sorted(stats.device_tiles))
     print(f"device tiles/flops: {per_dev or '-'} "
-          f"staging_overlap={stats.staging_overlap_s:.2f}s")
+          f"staging_overlap={stats.staging_overlap_s:.2f}s "
+          f"backend={stats.backend} compile={stats.kernel_compile_s:.2f}s")
     print(f"k={args.k}: {total} cliques "
           f"(plan {t_plan:.2f}s, front-to-finish {t_count:.2f}s, "
           f"of which extract+pack {t_pack:.2f}s)")

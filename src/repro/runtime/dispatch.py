@@ -88,8 +88,21 @@ def _mesh_batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     return axes if axes else tuple(mesh.axis_names[:1])
 
 
+# (step identity, input shape, device ordinal) triples whose first call --
+# compile + first run -- has already been billed to kernel_compile_s; the
+# jitted steps below are process-wide (lru_cache pins their identity), so
+# the seen-set must be process-wide too
+_COMPILED_STEPS = set()
+
+
 @functools.lru_cache(maxsize=None)
-def _device_step(l: int, method: str, et: bool, interpret: Optional[bool]):
+def _device_step(
+    l: int,
+    method: str,
+    et: bool,
+    interpret: Optional[bool],
+    backend: Optional[str] = None,
+):
     """Process-wide jitted ``count_packed`` step, shared by all dispatchers.
 
     Memoized so repeated queries reuse one jit cache: jit compiles one
@@ -99,7 +112,7 @@ def _device_step(l: int, method: str, et: bool, interpret: Optional[bool]):
 
     def step(A, cand):
         return engine_jax.count_packed(
-            A, cand, l, method=method, et=et, interpret=interpret
+            A, cand, l, method=method, et=et, interpret=interpret, backend=backend
         )
 
     return jax.jit(step)
@@ -112,6 +125,7 @@ def make_sharded_step(
     method: str = "auto",
     et: bool = True,
     interpret: Optional[bool] = None,
+    backend: Optional[str] = None,
 ):
     """One jitted SPMD ``count_packed`` step over the mesh batch axes.
 
@@ -124,7 +138,13 @@ def make_sharded_step(
 
     def inner(A_loc, cand_loc):
         return engine_jax.count_packed(
-            A_loc, cand_loc, l, method=method, et=et, interpret=interpret
+            A_loc,
+            cand_loc,
+            l,
+            method=method,
+            et=et,
+            interpret=interpret,
+            backend=backend,
         )
 
     fn = _shard_map(
@@ -181,11 +201,14 @@ class Dispatcher:
         et: bool = True,
         method: str = "auto",
         interpret: Optional[bool] = None,
+        backend: Optional[str] = None,
         async_staging: bool = True,
         max_inflight: int = 2,
         stats: Optional[Stats] = None,
         stage_times: Optional[dict] = None,
     ):
+        from ..kernels import ops as kops
+
         if l < 1:
             raise ValueError("dispatch requires l >= 1 (k >= 3)")
         self.l = l
@@ -194,6 +217,11 @@ class Dispatcher:
         self.async_staging = async_staging
         self.max_inflight = max(1, int(max_inflight))
         self.stats = stats if stats is not None else Stats()
+        # resolve once and bake the *resolved* name into the cached step:
+        # the jit cache key must distinguish REPRO_BACKEND states, and what
+        # actually executes must match what stats.backend reports
+        backend = kops.resolve_backend(backend, interpret)
+        self.stats.backend = backend
         self.stage_times = stage_times
         self.total = 0
         self.tiles = 0
@@ -203,7 +231,7 @@ class Dispatcher:
         if mesh is not None:
             self.devices = list(mesh.devices.flat)
             self._step, axes = make_sharded_step(
-                mesh, l, method=method, et=et, interpret=interpret
+                mesh, l, method=method, et=et, interpret=interpret, backend=backend
             )
             self._n_shards = int(np.prod([mesh.shape[a] for a in axes]))
             ns, ps = jax.sharding.NamedSharding, jax.sharding.PartitionSpec
@@ -215,8 +243,23 @@ class Dispatcher:
             self.devices = resolve_devices(devices)
             self._n_shards = 1
             self._in_shardings = None
-            self._step = _device_step(l, method, et, interpret)
+            self._step = _device_step(l, method, et, interpret, backend)
         self._loads = np.zeros(len(self.devices))
+
+    def _run_step(self, A, cand, device: int):
+        """Invoke the jitted step; time the first call per
+        (step, shape, device) signature into ``stats.kernel_compile_s``
+        (compile + first run).  The seen-set is process-wide, matching the
+        process-wide jit cache: a warm executable must neither block nor
+        re-bill its run time as compile on later dispatcher instances."""
+        sig = (id(self._step), A.shape, device)
+        if sig in _COMPILED_STEPS:
+            return self._step(A, cand)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._step(A, cand))
+        self.stats.kernel_compile_s += time.perf_counter() - t0
+        _COMPILED_STEPS.add(sig)
+        return out
 
     @property
     def n_devices(self) -> int:
@@ -255,7 +298,7 @@ class Dispatcher:
             cand = jax.device_put(batch.cand, self.devices[d])
             per_dev = np.zeros(self.n_devices, dtype=np.int64)
             per_dev[d] = batch.B
-        out = self._step(A, cand)
+        out = self._run_step(A, cand, d)
         self.placements.append(d)
         self.tiles += batch.B
         self._account(per_dev, batch.T)
@@ -298,8 +341,21 @@ class Dispatcher:
 
     def finish(self) -> int:
         """Drain all in-flight work; returns the accumulated exact count."""
+        from ..kernels import ops as kops
+
         self._drain()
+        self.stats.kernel_compile_s += kops.consume_compile_s()
         return self.total
+
+
+def _is_ready(x) -> bool:
+    """Non-blocking readiness probe of a device array (True = safe to
+    fetch without stalling).  Conservatively True when the runtime lacks
+    ``is_ready`` -- callers then simply block, the pre-overlap behavior."""
+    try:
+        return bool(x.is_ready())
+    except AttributeError:  # pragma: no cover - older jax runtimes
+        return True
 
 
 class ListDispatcher:
@@ -307,12 +363,25 @@ class ListDispatcher:
 
     Streams packed tile batches across the local device set and harvests
     (count, overflow, buffer) triples instead of scalar partials.  Each
-    submit runs a two-phase device step on the LPT-chosen device: a count
+    batch runs a two-phase device step on its LPT-chosen device: a count
     pass sizes the emit buffer (pow2-rounded, capped -- see
-    ``repro.core.listing.capacity_for``), then the Pallas listing kernel
-    fills it.  Harvest order is FIFO, i.e. exactly the submission order, so
-    decoded rows reach the sink deterministically **in batch order** no
-    matter how many devices executed them or how staging overlapped.
+    ``repro.core.listing.capacity_for``), then the listing kernel fills it.
+
+    The two phases are **pipelined, not serialized**: ``submit`` launches
+    the count pass asynchronously and queues the batch as *pending*; the
+    listing kernel is launched as soon as that batch's counts land on the
+    host (probed non-blockingly via ``jax.Array.is_ready`` each submit, or
+    forced when the in-flight window fills).  The host therefore never
+    sits in a count-pass fence while other devices are idle -- the
+    serialization that made 4-device listing slower than 1-device before
+    this restructure.  Harvest/decode of completed triples likewise
+    overlaps device execution of later batches.
+
+    Ordering guarantee: pending batches are promoted strictly FIFO and
+    harvested strictly FIFO, so decoded rows reach the sink
+    deterministically **in batch order** no matter how many devices
+    executed them or how staging overlapped (asserted by
+    ``tests/test_dispatch.py::test_list_dispatcher_sink_order_deterministic``).
     Overflowed tiles are re-listed on the host at harvest time (never
     truncated); the shard_map mesh path is counting-only.
     """
@@ -328,11 +397,13 @@ class ListDispatcher:
         max_capacity: Optional[int] = None,
         et_t: int = 3,
         interpret: Optional[bool] = None,
+        backend: Optional[str] = None,
         async_staging: bool = True,
         max_inflight: int = 2,
         stage_times: Optional[dict] = None,
     ):
         from ..core import listing
+        from ..kernels import ops as kops
 
         if l < 1:
             raise ValueError("dispatch requires l >= 1 (k >= 3)")
@@ -341,12 +412,16 @@ class ListDispatcher:
         self.l = l
         self.sink = sink
         self.stats = stats if stats is not None else Stats()
+        # resolved once, like Dispatcher: cached step and stats must agree
+        backend = kops.resolve_backend(backend, interpret)
+        self.stats.backend = backend
         self.capacity = capacity
         self.max_capacity = (
             listing.MAX_CAPACITY if max_capacity is None else int(max_capacity)
         )
         self.et_t = et_t
         self.interpret = interpret
+        self.backend = backend
         self.async_staging = async_staging
         self.max_inflight = max(1, int(max_inflight))
         self.stage_times = stage_times
@@ -355,8 +430,13 @@ class ListDispatcher:
         self.devices = resolve_devices(devices)
         # et=False: ``hard`` is then the raw per-tile count for EVERY tile
         # (no 2-plex masking), which is exactly the emit-buffer size input
-        self._count_step = _device_step(l, "auto", False, interpret)
+        self._count_step = _device_step(l, "auto", False, interpret, backend)
         self._loads = np.zeros(len(self.devices))
+        # count pass in flight, list kernel not yet launched (FIFO)
+        self._pending: Deque[Tuple[int, pipeline.TileBatch, tuple]] = (
+            collections.deque()
+        )
+        # list kernel in flight, not yet harvested (FIFO)
         self._inflight: Deque[Tuple[int, pipeline.TileBatch, tuple]] = (
             collections.deque()
         )
@@ -366,36 +446,74 @@ class ListDispatcher:
         return len(self.devices)
 
     def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
-        """Stage one batch: count pass sizes the buffer, list kernel fills it."""
-        from ..core import listing
-        from ..kernels import ops as kops
-
+        """Stage one batch: async count pass, deferred list-kernel launch."""
         d = int(np.argmin(self._loads)) if device is None else int(device)
         cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
         self._loads[d] += cost
         A = jax.device_put(batch.A, self.devices[d])
         cand = jax.device_put(batch.cand, self.devices[d])
         if self.capacity is None:
-            hard, _, _, _ = self._count_step(A, cand)
-            cap = listing.capacity_for(np.asarray(hard), self.max_capacity)
+            # non-blocking: readiness is probed at promotion time
+            hard = self._count_step(A, cand)[0]
         else:
-            cap = max(1, int(self.capacity))
-        out = kops.list_tiles(A, cand, self.l, capacity=cap, interpret=self.interpret)
+            hard = None
         self.placements.append(d)
         self.tiles += batch.B
         tiles, flops = self.stats.device_tiles, self.stats.device_flops
         tiles[d] = tiles.get(d, 0) + batch.B
         flops[d] = flops.get(d, 0) + batch_flops(batch.B, batch.T)
-        self._inflight.append((d, batch, out))
+        self._pending.append((d, batch, (A, cand, hard)))
+        self._promote(block=False)
         if not self.async_staging:
             self._drain()
         else:
-            while len(self._inflight) > self.max_inflight * self.n_devices:
+            while (
+                len(self._pending) + len(self._inflight)
+                > self.max_inflight * self.n_devices
+            ):
                 self._harvest_one()
+
+    def _promote(self, block: bool) -> None:
+        """Launch list kernels for pending batches, strictly FIFO.
+
+        With ``block=False`` only batches whose count pass already landed
+        are promoted; ``block=True`` forces at least the queue head
+        through (used when the harvest side runs dry).
+        """
+        from ..core import listing
+        from ..kernels import ops as kops
+
+        while self._pending:
+            d, batch, (A, cand, hard) = self._pending[0]
+            if hard is None:
+                cap = max(1, int(self.capacity))
+            else:
+                if not block and not _is_ready(hard):
+                    break
+                t0 = time.perf_counter()
+                counts = np.asarray(hard)  # blocks only until THIS batch
+                if self.stage_times is not None:
+                    self.stage_times["device"] = (
+                        self.stage_times.get("device", 0.0) + time.perf_counter() - t0
+                    )
+                cap = listing.capacity_for(counts, self.max_capacity)
+            self._pending.popleft()
+            out = kops.list_tiles(
+                A,
+                cand,
+                self.l,
+                capacity=cap,
+                backend=self.backend,
+                interpret=self.interpret,
+            )
+            self._inflight.append((d, batch, out))
+            block = False  # only the head is ever forced
 
     def _harvest_one(self) -> None:
         from ..core import listing
 
+        if not self._inflight:
+            self._promote(block=True)
         _, batch, out = self._inflight.popleft()
         t0 = time.perf_counter()
         bufs, cnt, ovf = (np.asarray(x) for x in out)  # blocks
@@ -405,18 +523,25 @@ class ListDispatcher:
         )
         self.stats.emitted_cliques += self.sink.emit(arr)
         t2 = time.perf_counter()
+        # decode/emit of this batch overlapped device work of later
+        # batches; promote any counts that landed meanwhile before the
+        # next (possibly blocking) harvest
+        self._promote(block=False)
         if self.stage_times is not None:
             st = self.stage_times
             st["device"] = st.get("device", 0.0) + (t1 - t0)
             st["emit"] = st.get("emit", 0.0) + (t2 - t1)
 
     def _drain(self) -> None:
-        while self._inflight:
+        while self._pending or self._inflight:
             self._harvest_one()
 
     def finish(self) -> int:
         """Drain all in-flight batches; returns rows accepted by the sink."""
+        from ..kernels import ops as kops
+
         self._drain()
+        self.stats.kernel_compile_s += kops.consume_compile_s()
         return self.sink.accepted
 
 
@@ -429,6 +554,7 @@ def dispatch_scheduled(
     et: bool = True,
     method: str = "auto",
     interpret: Optional[bool] = None,
+    backend: Optional[str] = None,
     async_staging: bool = True,
     max_inflight: int = 2,
     stats: Optional[Stats] = None,
@@ -449,6 +575,7 @@ def dispatch_scheduled(
         et=et,
         method=method,
         interpret=interpret,
+        backend=backend,
         async_staging=async_staging,
         max_inflight=max_inflight,
         stats=stats,

@@ -1,0 +1,278 @@
+"""Backend registry parity suite: lax vs pallas-interpret vs jnp-ref vs
+host oracle vs brute force, at the kernel, engine, and API layers.
+
+The acceptance bar is *array equality*, not set equality: the compiled lax
+backend must fill byte-identical (buffer, count, overflow) triples and
+byte-identical decoded clique arrays -- zero padding included -- so any
+caller can flip backends without re-validating downstream code.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import ebbkc, oracle
+from repro.core.bitops import pack_mask, pack_rows
+from repro.kernels import lax_backend, ops, ref
+
+
+def packed_tiles(rng, B, T, n_lo=4, n_hi=16, p_lo=0.3, p_hi=0.9):
+    As, cands, gs = [], [], []
+    for _ in range(B):
+        g = random_graph(rng, n_lo=n_lo, n_hi=min(T, n_hi), p_lo=p_lo,
+                         p_hi=p_hi)
+        rows = [0] * g.n
+        for u, v in g.edges.tolist():
+            rows[u] |= 1 << v
+            rows[v] |= 1 << u
+        As.append(pack_rows(rows, T))
+        cands.append(pack_mask((1 << g.n) - 1, T))
+        gs.append(g)
+    return np.stack(As), np.stack(cands), gs
+
+
+def crafted_triangle_tiles(T=32):
+    """Tiles exercising the lifted l'==3 base case: zero, one, and many
+    triangles, plus an empty candidate set."""
+    specs = [
+        ("star", 6, [(0, i) for i in range(1, 6)]),            # 0 triangles
+        ("c4", 4, [(0, 1), (1, 2), (2, 3), (3, 0)]),           # 0 triangles
+        ("tri", 5, [(0, 1), (1, 2), (0, 2), (3, 4)]),          # 1 triangle
+        ("k6", 6, [(i, j) for i in range(6) for j in range(i + 1, 6)]),
+        ("empty", 3, []),
+        ("two-tri", 6, [(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (2, 4),
+                        (4, 5)]),
+    ]
+    from repro.core import graph as G
+    As, cands, gs = [], [], []
+    for _, n, edges in specs:
+        rows = [0] * n
+        for u, v in edges:
+            rows[u] |= 1 << v
+            rows[v] |= 1 << u
+        As.append(pack_rows(rows, T))
+        cands.append(pack_mask((1 << n) - 1, T))
+        gs.append(G.from_edges(n, edges))
+    return np.stack(As), np.stack(cands), gs
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [32, 64])
+@pytest.mark.parametrize("l", [1, 2, 3, 4, 5])
+def test_count_backends_match_brute_force(T, l):
+    rng = np.random.default_rng(T * 100 + l)
+    A, cand, gs = packed_tiles(rng, 5, T)
+    exp = np.asarray([oracle.count_kcliques_brute(g, l) for g in gs],
+                     dtype=np.uint32)
+    got_lax = np.asarray(ops.count_tiles(A, cand, l, backend="lax"))
+    got_pal = np.asarray(ops.count_tiles(A, cand, l, backend="pallas"))
+    got_ref = np.asarray(ops.count_tiles(A, cand, l, backend="ref"))
+    np.testing.assert_array_equal(got_lax, exp)
+    np.testing.assert_array_equal(got_pal, exp)
+    np.testing.assert_array_equal(got_ref, exp)
+
+
+@pytest.mark.parametrize("T", [32])
+@pytest.mark.parametrize("l", [1, 2, 3, 4, 5])
+def test_list_backends_byte_identical_capacity_sweep(T, l):
+    """(buffer, count, overflow) triples are byte-identical across
+    backends for every capacity, including overflowing ones."""
+    rng = np.random.default_rng(T * 10 + l)
+    A, cand, gs = packed_tiles(rng, 4, T)
+    exp = [sorted(oracle.list_kcliques_brute(g, l)) for g in gs]
+    for cap in (1, 2, 8, max(max(map(len, exp)), 1)):
+        out_lax = [np.asarray(x)
+                   for x in ops.list_tiles(A, cand, l, cap, backend="lax")]
+        out_pal = [np.asarray(x)
+                   for x in ops.list_tiles(A, cand, l, cap,
+                                           backend="pallas")]
+        for a, b in zip(out_lax, out_pal):
+            np.testing.assert_array_equal(a, b)
+        bufs, cnt, ovf = out_lax
+        for b, want in enumerate(exp):
+            assert int(cnt[b]) == len(want)
+            assert bool(ovf[b]) == (len(want) > cap)
+            got = [tuple(r) for r in bufs[b][: min(len(want), cap)].tolist()]
+            assert got == want[: min(len(want), cap)]
+            # slots past the emitted prefix stay zeroed on every backend
+            assert (bufs[b][min(len(want), cap):] == 0).all()
+
+
+@pytest.mark.parametrize("l", [3, 4])
+def test_lifted_base_case_on_triangle_boundary_tiles(l):
+    """The l'==3 close on tiles with zero/one/many triangles, exactly at
+    the l==3 (no DFS at all) and l==4 (one DFS level) boundaries."""
+    A, cand, gs = crafted_triangle_tiles()
+    exp_counts = np.asarray([oracle.count_kcliques_brute(g, l) for g in gs],
+                            dtype=np.uint32)
+    for backend in ("lax", "pallas"):
+        got = np.asarray(ops.count_tiles(A, cand, l, backend=backend,
+                                         method="dfs" if backend == "pallas"
+                                         else "auto"))
+        np.testing.assert_array_equal(got, exp_counts, err_msg=backend)
+        bufs, cnt, ovf = (np.asarray(x)
+                          for x in ops.list_tiles(A, cand, l, 32,
+                                                  backend=backend))
+        np.testing.assert_array_equal(cnt, exp_counts, err_msg=backend)
+        assert not ovf.any()
+        for b, g in enumerate(gs):
+            want = sorted(oracle.list_kcliques_brute(g, l))
+            got_rows = [tuple(r) for r in bufs[b][: len(want)].tolist()]
+            assert got_rows == want, (backend, b)
+
+
+def test_count_tiles_low_l_closed_forms():
+    """l <= 2 is answered by the closed-form ref path on every backend
+    (regression: this used to be an unreachable None-returning branch)."""
+    rng = np.random.default_rng(5)
+    A, cand, gs = packed_tiles(rng, 3, 32)
+    for l in (1, 2):
+        exp = np.asarray([oracle.count_kcliques_brute(g, l) for g in gs],
+                         dtype=np.uint32)
+        for backend in ("lax", "pallas", "ref"):
+            got = ops.count_tiles(A, cand, l, backend=backend)
+            assert got is not None
+            np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+def test_list_tiles_rejects_ref_backend():
+    rng = np.random.default_rng(6)
+    A, cand, _ = packed_tiles(rng, 2, 32)
+    with pytest.raises(ValueError):
+        ops.list_tiles(A, cand, 3, 8, backend="ref")
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_precedence(monkeypatch):
+    monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
+    # default auto -> lax off-TPU (this suite runs on CPU hosts)
+    assert ops.resolve_backend() == "lax"
+    # deprecated interpret alias pins pallas
+    assert ops.resolve_backend(interpret=True) == "pallas"
+    assert ops.resolve_backend(interpret=False) == "pallas"
+    # env overrides the alias but not an explicit argument
+    monkeypatch.setenv(ops.BACKEND_ENV, "lax")
+    assert ops.resolve_backend(interpret=True) == "lax"
+    assert ops.resolve_backend("pallas", interpret=True) == "pallas"
+    monkeypatch.setenv(ops.BACKEND_ENV, "pallas")
+    assert ops.resolve_backend() == "pallas"
+    assert ops.resolve_backend("lax") == "lax"
+    # explicit auto re-enables auto resolution
+    assert ops.resolve_backend("auto") == "lax"
+    monkeypatch.setenv(ops.BACKEND_ENV, "bogus")
+    with pytest.raises(ValueError):
+        ops.resolve_backend()
+    with pytest.raises(ValueError):
+        ops.resolve_backend("bogus")
+
+
+def test_autotune_picks_and_caches():
+    ops.clear_autotune_cache()
+    choice = ops.autotune_backend("count", 4, 32)
+    assert choice in ("lax", "pallas")
+    assert ops._AUTOTUNE_CACHE[("count", 4, 32)] == choice
+    # cached: second call returns identically without re-benchmarking
+    assert ops.autotune_backend("count", 4, 32) == choice
+    # end to end through the registry
+    rng = np.random.default_rng(7)
+    A, cand, gs = packed_tiles(rng, 3, 32)
+    got = np.asarray(ops.count_tiles(A, cand, 4, backend="autotune"))
+    exp = np.asarray(ref.clique_count_tiles_ref(A, cand, 4))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_lax_backend_lane_padding_is_neutral():
+    """Odd batch sizes are padded to a power of two with zero-cand lanes;
+    results must be invariant to the padding."""
+    rng = np.random.default_rng(8)
+    A, cand, gs = packed_tiles(rng, 5, 32)  # 5 -> padded to 8 internally
+    exp = np.asarray([oracle.count_kcliques_brute(g, 4) for g in gs],
+                     dtype=np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(lax_backend.count_tiles(A, cand, 4)), exp)
+    sub = np.asarray(lax_backend.count_tiles(A[:3], cand[:3], 4))
+    np.testing.assert_array_equal(sub, exp[:3])
+
+
+def test_lax_listing_chunking_invariant():
+    """Chunked and unchunked listing produce identical triples."""
+    rng = np.random.default_rng(9)
+    A, cand, _ = packed_tiles(rng, 6, 32)
+    base = [np.asarray(x) for x in lax_backend.list_tiles(A, cand, 3, 16)]
+    import repro.kernels.lax_backend as lb
+    old = lb._EMIT_BYTES_BUDGET
+    try:
+        lb._EMIT_BYTES_BUDGET = 1  # force 1-lane chunks
+        chunked = [np.asarray(x) for x in lb.list_tiles(A, cand, 3, 16)]
+    finally:
+        lb._EMIT_BYTES_BUDGET = old
+    for a, b in zip(base, chunked):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# engine / API level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", ["truss", "hybrid", "color"])
+def test_engine_count_backend_parity(order):
+    rng = np.random.default_rng(11)
+    g = random_graph(rng, n_lo=12, n_hi=22, p_lo=0.4, p_hi=0.8)
+    for k in range(3, 7):
+        ref_c = ebbkc.count(g, k, order=order).count
+        for backend in ("lax", "pallas"):
+            got = ebbkc.count(g, k, order=order, backend="jax",
+                              engine_kwargs={"backend": backend}).count
+            assert got == ref_c, (order, k, backend)
+
+
+@pytest.mark.parametrize("order", ["truss", "hybrid", "color"])
+def test_engine_listing_backend_byte_parity(order):
+    """Decoded clique arrays are byte-identical across backends (and match
+    the host oracle as a set), including under tight capacities that force
+    the overflow -> host spill path."""
+    rng = np.random.default_rng(13)
+    g = random_graph(rng, n_lo=12, n_hi=20, p_lo=0.5, p_hi=0.85)
+    for k in (3, 4, 5, 6):
+        host, _ = ebbkc.list_cliques(g, k, order=order)
+        # backends must agree byte-for-byte *within* a capacity mode (an
+        # overflowed tile is re-listed by the host recursion, whose
+        # deterministic within-tile order legitimately differs from the
+        # kernel's lexicographic one -- pre-existing PR3 semantics)
+        for cap_kw in ({}, {"capacity": 2}):
+            outs = {}
+            for backend in ("lax", "pallas"):
+                got, st = ebbkc.list_cliques(
+                    g, k, order=order, backend="jax",
+                    engine_kwargs=dict(backend=backend, **cap_kw))
+                outs[backend] = got
+                assert sorted(map(tuple, got.tolist())) == \
+                    sorted(map(tuple, host.tolist())), (order, k, backend)
+            np.testing.assert_array_equal(
+                outs["lax"], outs["pallas"],
+                err_msg=str((order, k, cap_kw)))
+
+
+def test_stats_report_backend_and_compile_time():
+    rng = np.random.default_rng(17)
+    g = random_graph(rng, n_lo=10, n_hi=16, p_lo=0.5, p_hi=0.8)
+    r = ebbkc.count(g, 5, backend="jax", engine_kwargs={"backend": "lax"})
+    assert r.stats.backend == "lax"
+    assert r.stats.kernel_compile_s >= 0.0
+    r2 = ebbkc.count(g, 5, backend="jax",
+                     engine_kwargs={"backend": "pallas"})
+    assert r2.stats.backend == "pallas"
+    _, st = ebbkc.list_cliques(g, 5, backend="jax",
+                               engine_kwargs={"backend": "lax"})
+    assert st.backend == "lax"
+    host_r = ebbkc.count(g, 5)
+    assert host_r.stats.backend == "host"
