@@ -236,9 +236,23 @@ def bench_pipeline_stages():
     emit("pipeline/rmat12/k5/frontend_reference", t_ref, f"tiles={n_ref}")
     emit("pipeline/rmat12/k5/frontend_vectorized", t_vec,
          f"tiles={n_vec};extract_speedup={t_ref / max(t_vec, 1e-9):.2f}")
+    # parallel pack producer: same byte-identical stream, wall clock of
+    # draining it with a free consumer (packing overlaps across workers)
+    workers = pipeline.default_pack_workers()
+    _, t_par = timed(
+        lambda: [b for b in pipeline.stream_batches(
+            g, k, order="hybrid", pack_workers=None)], repeat=2)
+    emit("pipeline/rmat12/k5/frontend_parallel", t_par,
+         f"tiles={n_vec};pack_workers={workers};"
+         f"speedup_vs_serial={t_vec / max(t_par, 1e-9):.2f}")
 
+    # serial packer + no plan cache: the seed-equivalent arithmetic below
+    # subtracts stage seconds from wall-clock, so "pack" must be wall time
+    # (parallel workers bill CPU-seconds) and the table build must stay in
+    # the "extract" stage (the plan cache would move it to plan_build_s)
     stage = {}
     r, t_e2e = timed(engine_jax.count, g, k, interpret=True,
+                     pack_workers=0, plan_cache=False,
                      stage_times=stage)
     breakdown = ";".join(
         f"{s}={stage.get(s, 0.0) * 1e6:.0f}us"
@@ -261,9 +275,11 @@ def bench_pipeline_stages():
     breakdown_l = ";".join(
         f"{s}={stage_l.get(s, 0.0) * 1e6:.0f}us"
         for s in ("extract", "pack", "device", "emit"))
+    front_l = stage_l.get("extract", 0.0) + stage_l.get("pack", 0.0)
     emit(f"pipeline/rmat12/k{k}/listing_e2e", t_list,
          f"emitted={lst.emitted_cliques};"
          f"cliques_per_s={lst.emitted_cliques / max(t_list, 1e-9):.0f};"
+         f"frontend_s={front_l:.3f};pack_workers={lst.pack_workers};"
          f"overflowed={lst.overflowed_tiles};"
          f"sink_bytes={lst.sink_bytes};{breakdown_l}")
 
@@ -274,7 +290,7 @@ def bench_pipeline_stages():
 
 def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                    out_json=None, with_listing=False, baseline=None,
-                   backends=("auto",)):
+                   backends=("auto",), batch_size=256):
     """Sweep `engine_jax.count(devices=n)` over device counts x backends.
 
     Times front-end-to-finish (extract + pack + device + combine, plan
@@ -322,7 +338,8 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
         device time attributable apart from extract/pack/decode."""
         l = k - 2
         staged = []
-        for item in pipeline.stream_batches(plan, k, order="hybrid"):
+        for item in pipeline.stream_batches(plan, k, order="hybrid",
+                                            batch_size=batch_size):
             if isinstance(item, tiles_mod.Tile):
                 continue  # oversize spills are host work, not kernel stage
             staged.append((jnp.asarray(item.A), jnp.asarray(item.cand)))
@@ -362,11 +379,13 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                 # cells legitimately report ~0); warm pass gives the
                 # steady-state stage breakdown, timing is best of the two
                 r_cold, t_cold = timed(engine_jax.count, g, k, plan=plan,
-                                       devices=n, backend=backend)
+                                       devices=n, backend=backend,
+                                       batch_size=batch_size)
                 compile_s = r_cold.stats.kernel_compile_s
                 stage = {}
                 r, t_warm = timed(engine_jax.count, g, k, plan=plan,
                                   devices=n, backend=backend,
+                                  batch_size=batch_size,
                                   stage_times=stage)
                 t = min(t_cold, t_warm)
                 if base_t is None:
@@ -377,17 +396,21 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                     mismatches.append((k, n, r.count, ref_count))
                 speedup = base_t / max(t, 1e-9)
                 dev_s = stage.get("device", 0.0)
+                front_s = stage.get("extract", 0.0) + stage.get("pack", 0.0)
                 emit(f"dispatch/{gname}/k{k}/{backend}/dev{n}", t,
                      f"count={r.count};tiles={r.tiles};devices_used={used};"
-                     f"kernel_s={dev_s:.3f};"
+                     f"kernel_s={dev_s:.3f};frontend_s={front_s:.3f};"
                      f"overlap_s={r.stats.staging_overlap_s:.3f};"
                      f"compile_s={compile_s:.3f};"
+                     f"pack_workers={r.stats.pack_workers};"
                      f"speedup_vs_dev1={speedup:.2f}")
                 records.append({
                     "kind": "count", "backend": backend,
                     "graph": graph_spec, "k": k, "devices": n,
                     "devices_used": used, "seconds": t, "count": r.count,
                     "kernel_seconds": dev_s,
+                    "frontend_s": front_s,
+                    "pack_workers": r.stats.pack_workers,
                     "tiles": r.tiles, "spilled": r.stats.spilled_tiles,
                     "staging_overlap_s": r.stats.staging_overlap_s,
                     "kernel_compile_s": compile_s,
@@ -401,6 +424,7 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                     return ebbkc.list_cliques(
                         g, k, backend="jax", plan=plan,
                         engine_kwargs=dict(devices=n, backend=backend,
+                                           batch_size=batch_size,
                                            stage_times=stage_l))
                 # best of 2 like the count sweep: the serving model pays
                 # kernel compiles once per process, not per query
@@ -410,15 +434,22 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                 rate = lst.emitted_cliques / max(t_l, 1e-9)
                 # kernel-stage-only throughput: the device seconds actually
                 # spent producing (count, overflow, buffer) triples --
-                # attributable separately from staging/pack/decode (stage
-                # dict accumulates over both repeats)
+                # attributable separately from staging/pack/decode; the
+                # front-end (extract + pack worker seconds) is reported as
+                # its own split so the Amdahl bottleneck is visible (the
+                # stage dict accumulates over both repeats, hence /2)
                 kern_s = stage_l.get("device", 0.0) / 2
+                front_l = (stage_l.get("extract", 0.0)
+                           + stage_l.get("pack", 0.0)) / 2
                 kern_rate = lst.emitted_cliques / max(kern_s, 1e-9)
                 emit(f"listing/{gname}/k{k}/{backend}/dev{n}", t_l,
                      f"emitted={lst.emitted_cliques};"
                      f"cliques_per_s={rate:.0f};"
                      f"kernel_s={kern_s:.3f};"
                      f"kernel_cliques_per_s={kern_rate:.0f};"
+                     f"frontend_s={front_l:.3f};"
+                     f"pack_workers={lst.pack_workers};"
+                     f"queue_occ={lst.pack_queue_occupancy:.2f};"
                      f"overflowed={lst.overflowed_tiles};"
                      f"sink_bytes={lst.sink_bytes}")
                 records.append({
@@ -429,6 +460,9 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
                     "cliques_per_s": rate,
                     "kernel_seconds": kern_s,
                     "kernel_cliques_per_s": kern_rate,
+                    "frontend_s": front_l,
+                    "pack_workers": lst.pack_workers,
+                    "pack_queue_occupancy": lst.pack_queue_occupancy,
                     "overflowed_tiles": lst.overflowed_tiles,
                     "sink_bytes": lst.sink_bytes,
                 })
@@ -454,6 +488,7 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
     if out_json:
         payload = {"graph": graph_spec, "ks": list(ks),
                    "device_counts": counts, "backends": list(backends),
+                   "batch_size": batch_size,
                    "parity": not mismatches, "records": records}
         with open(out_json, "w") as f:
             json.dump(payload, f, indent=1)
@@ -603,6 +638,12 @@ def main() -> None:
                     help="committed baseline JSON (e.g. BENCH_pr4.json); "
                          "any count mismatch vs matching records exits "
                          "non-zero")
+    ap.add_argument("--batch-size", type=int, default=256,
+                    help="tile batch size for the dispatch sweep -- applied "
+                         "to BOTH the e2e rows and the kernel-stage row, so "
+                         "their in-run comparison stays apples-to-apples "
+                         "(counts are batch-size-invariant, so baseline "
+                         "diffs are unaffected)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.devices:
@@ -616,7 +657,8 @@ def main() -> None:
         bench_dispatch(graph_spec=args.graph, ks=ks, device_counts=counts,
                        out_json=args.json, with_listing=args.with_listing,
                        baseline=args.baseline,
-                       backends=tuple(args.backend.split(",")))
+                       backends=tuple(args.backend.split(",")),
+                       batch_size=args.batch_size)
         return
     wanted = set(args.benches)
     for fn in ALL:

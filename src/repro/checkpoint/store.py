@@ -89,9 +89,15 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
-def restore_checkpoint(directory: str, template, step: Optional[int] = None,
-                       shardings=None):
+def restore_checkpoint(directory: str, template=None,
+                       step: Optional[int] = None, shardings=None):
     """Restore into the structure of ``template``.
+
+    With ``template=None`` the flat array dict is returned as the tree
+    (keys are the flattened ``a/b/#i`` paths) -- the schema-free mode used
+    by consumers whose structure is data-dependent, e.g. the
+    :mod:`repro.core.pipeline` plan store (a plan may or may not carry a
+    truss decomposition, coloring, or either membership table).
 
     ``shardings``: optional pytree (same structure) of jax.sharding.Sharding
     -- this is the elastic-rescale path: arrays are placed under the *new*
@@ -104,7 +110,7 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
     path = os.path.join(directory, f"step_{step:010d}")
     data = np.load(os.path.join(path, "arrays.npz"))
     flat = {k: data[k] for k in data.files}
-    tree = _unflatten_into(template, flat)
+    tree = flat if template is None else _unflatten_into(template, flat)
     if shardings is not None:
         tree = jax.tree.map(
             lambda x, s: jax.device_put(x, s) if s is not None else x,

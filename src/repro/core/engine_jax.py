@@ -203,11 +203,24 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
           batch_size: int = 256, bins: Sequence[int] = _BINS,
           stage_times: Optional[Dict[str, float]] = None,
           devices=None, async_staging: bool = True,
-          backend: Optional[str] = None):
+          backend: Optional[str] = None,
+          pack_workers: Optional[int] = None,
+          prefetch: Optional[int] = None,
+          plan_cache: bool = True,
+          plan_cache_dir: Optional[str] = None):
     """Full-graph k-clique count on the accelerator engine.
 
     Streams capacity-batched packed tiles from :mod:`repro.core.pipeline`;
     pass a prebuilt ``plan`` to amortize preprocessing across queries.
+    With ``plan=None`` the engine consults the keyed plan cache
+    (``pipeline.cached_plan``; disable with ``plan_cache=False``) so a
+    repeated query on the same graph skips the O(delta*m) decomposition --
+    ``stats.plan_cache_hit`` / ``stats.plan_build_s`` report which path
+    ran, and ``plan_cache_dir`` adds an on-disk plan store shared across
+    processes.  Packing runs on a parallel producer (``pack_workers``
+    threads, default auto; ``0`` forces the serial packer) that keeps up
+    to ``prefetch`` packed batches ahead of device dispatch.
+
     Oversize tiles are counted on the host (``stats.spilled_tiles`` /
     ``stats.spill_sizes``).  ``stage_times`` (optional dict) accumulates
     extract/pack/device/combine wall-clock seconds.  ``backend`` selects
@@ -231,22 +244,41 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
         return Result(g.n, stats)
     if k == 2:
         return Result(g.m, stats)
+    if plan is None and plan_cache:
+        plan = pipeline.cached_plan(g, order=order,
+                                    cache_dir=plan_cache_dir, stats=stats)
     total = 0
     ntiles = 0
     max_tile = 0
     l = k - 2
     et = et_route and et_t >= 2
-    disp = None
+    stream = pipeline.stream_batches(plan or g, k, order=order,
+                                     use_rule2=use_rule2,
+                                     batch_size=batch_size, bins=bins,
+                                     timings=stage_times,
+                                     pack_workers=pack_workers,
+                                     prefetch=prefetch, stats=stats)
     if devices is not None:
         from ..runtime.dispatch import Dispatcher
         disp = Dispatcher(l, devices, et=et, method=method,
                           interpret=interpret, backend=backend,
                           async_staging=async_staging,
                           stats=stats, stage_times=stage_times)
-    for item in pipeline.stream_batches(plan or g, k, order=order,
-                                        use_rule2=use_rule2,
-                                        batch_size=batch_size, bins=bins,
-                                        timings=stage_times):
+        spill_total = 0
+
+        def on_spill(tile: tiles_mod.Tile) -> None:
+            nonlocal spill_total
+            spill_total += count_spilled(tile, order, l, stats, et_t,
+                                         use_rule2)
+
+        try:
+            ntiles, max_tile = disp.consume(stream, on_spill=on_spill)
+            total = spill_total + disp.finish()
+        finally:
+            stream.close()  # stops parallel-producer workers on error too
+        stats.kernel_compile_s += kops.consume_compile_s()
+        return Result(total, stats, ntiles, max_tile)
+    for item in stream:
         if isinstance(item, tiles_mod.Tile):
             ntiles += 1
             max_tile = max(max_tile, item.s)
@@ -254,9 +286,6 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
             continue
         ntiles += item.B
         max_tile = max(max_tile, item.T)
-        if disp is not None:
-            disp.submit(item)
-            continue
         t0 = time.perf_counter()
         hard, nv, t, f = count_packed(
             jnp.asarray(item.A), jnp.asarray(item.cand), l,
@@ -270,7 +299,5 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
             stage_times["device"] = stage_times.get("device", 0.) + t1 - t0
             stage_times["combine"] = stage_times.get("combine", 0.) \
                 + time.perf_counter() - t1
-    if disp is not None:
-        total += disp.finish()
     stats.kernel_compile_s += kops.consume_compile_s()
     return Result(total, stats, ntiles, max_tile)

@@ -52,12 +52,33 @@ class Stats:
     emitted_cliques: int = 0
     overflowed_tiles: int = 0
     sink_bytes: int = 0
+    # speculative emit-capacity dispatch (repro.runtime.dispatch
+    # ListDispatcher, capacity=None): batches whose capacity guess proved
+    # too small and were re-listed once on the device at the exact size
+    emit_retries: int = 0
     # kernel backend registry (repro.kernels.ops): which backend served
     # the query ("host" for the python-int recursion) and the wall seconds
     # spent on first-call kernel compilation (compile + first run, one
     # entry per (kernel, backend, shape) signature per process)
     backend: str = ""
     kernel_compile_s: float = 0.0
+    # parallel front-end accounting (repro.core.pipeline.stream_batches):
+    # pack-pool size this query ran with (0 = inline serial packing),
+    # extract + pack seconds (worker CPU-seconds when parallel, so this
+    # can exceed the wall time it was hidden under), and the prefetch
+    # queue's mean occupancy (0..1 of the window) / peak depth observed at
+    # consumer harvest -- ~1.0 mean means the producer kept ahead of the
+    # device loop, ~0 means packing was the bottleneck
+    pack_workers: int = 0
+    frontend_s: float = 0.0
+    pack_queue_occupancy: float = 0.0
+    pack_queue_peak: int = 0
+    # plan cache (repro.core.pipeline.cached_plan): True when the query's
+    # preprocessing came from the keyed in-process/on-disk cache (the
+    # O(delta*m) decomposition was skipped); plan_build_s is the cold-path
+    # build time (0.0 on warm queries)
+    plan_cache_hit: bool = False
+    plan_build_s: float = 0.0
 
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:

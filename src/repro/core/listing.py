@@ -318,30 +318,65 @@ def stream_cliques(
     max_capacity: int = MAX_CAPACITY,
     devices=None,
     async_staging: bool = True,
+    max_inflight: int = 2,
     interpret: Optional[bool] = None,
     backend: Optional[str] = None,
     stage_times: Optional[dict] = None,
+    pack_workers: Optional[int] = None,
+    prefetch: Optional[int] = None,
+    plan_cache: bool = True,
+    plan_cache_dir: Optional[str] = None,
 ) -> ListResult:
     """List all k-cliques of ``source`` (Graph or PipelinePlan) into ``sink``.
 
     The accelerator twin of ``ebbkc.list_cliques(backend="host")``: streams
     capacity-batched packed tiles, runs the listing kernels (sized by a
-    first count pass unless ``capacity`` pins the buffer), decodes on the
-    host, and feeds the sink in deterministic stream order.  ``devices``
+    first count pass unless ``capacity`` pins the buffer or selects the
+    dispatcher's ``"speculative"`` ratchet mode), decodes on the host,
+    and feeds the sink in deterministic stream order.  ``devices``
     routes batches through :class:`repro.runtime.dispatch.ListDispatcher`
-    (per-device placement, double-buffered staging, FIFO harvest -- same
-    knobs as the counting engine).  ``backend`` selects the kernel
+    (per-device placement, double-buffered staging, FIFO harvest +
+    decode-worker overlap -- same knobs as the counting engine).  ``backend`` selects the kernel
     implementation (``repro.kernels.ops`` registry; emitted rows are
     byte-identical across backends).  Requires k >= 3 (the k <= 2 cases
     have closed forms; see ``ebbkc.list_cliques``).
+
+    Front-end knobs mirror ``engine_jax.count``: ``pack_workers`` /
+    ``prefetch`` run packing on the parallel producer ahead of device
+    dispatch (0 = serial; the emitted row stream is identical either
+    way), and a Graph ``source`` consults the keyed plan cache
+    (``plan_cache=False`` opts out; ``plan_cache_dir`` adds the on-disk
+    store) so warm queries skip the O(delta*m) decomposition.
     """
     if k < 3:
         raise ValueError("stream_cliques requires k >= 3")
+    if isinstance(capacity, str):
+        if capacity not in ("sized", "speculative"):
+            raise ValueError(f"capacity must be None, 'sized', "
+                             f"'speculative', or an int, got {capacity!r}")
+        if devices is None:
+            # dispatcher modes; the inline path's exact count-pass sizing
+            # covers both aliases
+            capacity = None
     stats = Stats()
     stats.backend = kops.resolve_backend(backend, interpret)
     res = ListResult(stats)
     l = k - 2
-    disp = None
+    if not isinstance(source, pipeline.PipelinePlan) and plan_cache:
+        source = pipeline.cached_plan(source, order=order,
+                                      cache_dir=plan_cache_dir, stats=stats)
+    stream = pipeline.stream_batches(
+        source,
+        k,
+        order=order,
+        use_rule2=use_rule2,
+        batch_size=batch_size,
+        bins=bins,
+        timings=stage_times,
+        pack_workers=pack_workers,
+        prefetch=prefetch,
+        stats=stats,
+    )
     if devices is not None:
         from ..runtime.dispatch import ListDispatcher
 
@@ -355,43 +390,52 @@ def stream_cliques(
             interpret=interpret,
             backend=backend,
             async_staging=async_staging,
+            max_inflight=max_inflight,
             et_t=et_t,
             stage_times=stage_times,
         )
-    for item in pipeline.stream_batches(
-        source,
-        k,
-        order=order,
-        use_rule2=use_rule2,
-        batch_size=batch_size,
-        bins=bins,
-        timings=stage_times,
-    ):
-        if sink.full:
-            break
-        if isinstance(item, tiles_mod.Tile):
-            res.tiles += 1
-            res.max_tile = max(res.max_tile, item.s)
-            _emit(sink, list_spilled(item, l, stats, et_t=et_t), stats)
-            continue
-        res.tiles += item.B
-        res.max_tile = max(res.max_tile, item.T)
-        if disp is not None:
-            disp.submit(item)
-            continue
-        arr = list_batch(
-            item,
-            l,
-            stats,
-            capacity=capacity,
-            max_capacity=max_capacity,
-            interpret=interpret,
-            backend=backend,
-            et_t=et_t,
-        )
-        _emit(sink, arr, stats)
-    if disp is not None:
-        disp.finish()
+
+        def on_spill(tile: tiles_mod.Tile) -> None:
+            # host listing runs here (consumer thread); the emit goes
+            # through the dispatcher's decode worker so the rows keep
+            # their FIFO position relative to batch decodes
+            disp.emit_rows(list_spilled(tile, l, stats, et_t=et_t))
+
+        try:
+            res.tiles, res.max_tile = disp.consume(stream, on_spill=on_spill)
+            disp.finish()
+        finally:
+            # error path: stop the decode worker from emitting into the
+            # caller's sink and cancel queued pack work; both are no-ops
+            # after a clean finish
+            disp.close()
+            stream.close()
+    else:
+        try:
+            for item in stream:
+                if sink.full:
+                    break
+                if isinstance(item, tiles_mod.Tile):
+                    res.tiles += 1
+                    res.max_tile = max(res.max_tile, item.s)
+                    _emit(sink, list_spilled(item, l, stats, et_t=et_t),
+                          stats)
+                    continue
+                res.tiles += item.B
+                res.max_tile = max(res.max_tile, item.T)
+                arr = list_batch(
+                    item,
+                    l,
+                    stats,
+                    capacity=capacity,
+                    max_capacity=max_capacity,
+                    interpret=interpret,
+                    backend=backend,
+                    et_t=et_t,
+                )
+                _emit(sink, arr, stats)
+        finally:
+            stream.close()  # shuts down any parallel-producer workers
     stats.sink_bytes += sink.bytes_written
     stats.kernel_compile_s += kops.consume_compile_s()
     return res

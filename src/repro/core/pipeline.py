@@ -31,9 +31,16 @@ reference oracle; parity tests assert byte-identical packed batches.
 """
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import dataclasses
+import hashlib
+import itertools
+import os
+import threading
 import time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple, \
+    Union
 
 import numpy as np
 
@@ -260,6 +267,165 @@ def _as_plan(source: Union[Graph, PipelinePlan]) -> PipelinePlan:
 
 
 # ---------------------------------------------------------------------------
+# plan persistence + keyed in-process cache (DESIGN.md section 8)
+# ---------------------------------------------------------------------------
+
+#: serialized-plan layout version; bump on any TileTable schema change so a
+#: stale on-disk plan is rebuilt instead of misread
+PLAN_FORMAT = 1
+
+#: in-process plan cache capacity (plans, LRU-evicted); a plan holds the
+#: graph plus O(sum tile sizes) table arrays, so keep the window small
+PLAN_CACHE_CAPACITY = 8
+
+_PLAN_CACHE: "collections.OrderedDict[str, PipelinePlan]" = \
+    collections.OrderedDict()
+_PLAN_CACHE_LOCK = threading.Lock()
+
+
+def plan_key(g: Graph, order: str = "hybrid") -> str:
+    """Content-addressed cache key: graph edges + ordering family.
+
+    Truss and hybrid modes share one key (both consume the "truss"
+    membership table); color mode keys separately.  O(m) to compute --
+    negligible next to the O(delta*m) decomposition it lets a warm query
+    skip.
+    """
+    family = "color" if order == "color" else "truss"
+    h = hashlib.sha256()
+    h.update(f"plan-v{PLAN_FORMAT}:{family}:{g.n}:{g.m}:".encode())
+    h.update(np.ascontiguousarray(g.edges).tobytes())
+    return h.hexdigest()[:24]
+
+
+def save_plan(plan: PipelinePlan, directory: str) -> str:
+    """Persist a plan's built structures via :mod:`repro.checkpoint.store`.
+
+    Saves the graph plus whatever is already built (truss decomposition,
+    coloring, membership tables) -- load never recomputes what was saved.
+    Atomic like every checkpoint (tmp dir + os.replace + COMMITTED).
+    """
+    from ..checkpoint import store
+
+    tree: Dict[str, object] = {
+        "graph": {"n": np.asarray(plan.g.n, np.int64),
+                  "edges": plan.g.edges, "indptr": plan.g.indptr,
+                  "indices": plan.g.indices}}
+    if plan._td is not None:
+        td = plan._td
+        tree["truss_dec"] = {
+            "order": td.order, "rank": td.rank, "support0": td.support0,
+            "peel_support": td.peel_support, "trussness": td.trussness,
+            "tau": np.asarray(td.tau, np.int64)}
+    if plan._colors is not None:
+        tree["colors"] = plan._colors
+    tables: Dict[str, Dict[str, np.ndarray]] = {}
+    for family, tb in plan._tables.items():
+        d = {"edge_id": tb.edge_id, "anchors": tb.anchors,
+             "offsets": tb.offsets, "verts": tb.verts,
+             "thresh": tb.thresh, "ekeys": tb.ekeys}
+        for opt in ("erank", "member_colors", "ncolors", "rule1"):
+            val = getattr(tb, opt)
+            if val is not None:
+                d[opt] = val
+        tables[family] = d
+    if tables:
+        tree["tables"] = tables
+    return store.save_checkpoint(
+        directory, 0, tree,
+        metadata={"format": PLAN_FORMAT, "families": sorted(plan._tables)})
+
+
+def load_plan(directory: str) -> Optional[PipelinePlan]:
+    """Restore a :func:`save_plan` plan; None if absent/stale-format."""
+    from ..checkpoint import store
+
+    got = store.restore_checkpoint(directory)
+    if got is None or got["metadata"].get("format") != PLAN_FORMAT:
+        return None
+    flat = got["tree"]
+    g = Graph(n=int(flat["graph/n"]), edges=flat["graph/edges"],
+              indptr=flat["graph/indptr"], indices=flat["graph/indices"])
+    plan = PipelinePlan(g=g)
+    if "truss_dec/rank" in flat:
+        plan._td = TrussDecomposition(
+            order=flat["truss_dec/order"], rank=flat["truss_dec/rank"],
+            support0=flat["truss_dec/support0"],
+            peel_support=flat["truss_dec/peel_support"],
+            trussness=flat["truss_dec/trussness"],
+            tau=int(flat["truss_dec/tau"]))
+    if "colors" in flat:
+        plan._colors = flat["colors"]
+    for family in got["metadata"].get("families", []):
+        p = f"tables/{family}/"
+        plan._tables[family] = TileTable(
+            family, flat[p + "edge_id"], flat[p + "anchors"],
+            flat[p + "offsets"], flat[p + "verts"], flat[p + "thresh"],
+            flat[p + "ekeys"], flat.get(p + "erank"),
+            member_colors=flat.get(p + "member_colors"),
+            ncolors=flat.get(p + "ncolors"), rule1=flat.get(p + "rule1"))
+    return plan
+
+
+def _plan_cache_insert(key: str, plan: PipelinePlan) -> None:
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE[key] = plan
+        _PLAN_CACHE.move_to_end(key)
+        while len(_PLAN_CACHE) > PLAN_CACHE_CAPACITY:
+            _PLAN_CACHE.popitem(last=False)
+
+
+def clear_plan_cache() -> None:
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE.clear()
+
+
+def cached_plan(g: Graph, order: str = "hybrid", *,
+                cache_dir: Optional[str] = None,
+                stats=None) -> PipelinePlan:
+    """Plan for ``g``/``order`` off the keyed cache; build only on miss.
+
+    Lookup order: in-process LRU (keyed by :func:`plan_key`) -> on-disk
+    plan store under ``cache_dir`` (persisted across processes via
+    :func:`save_plan`) -> build (and save when ``cache_dir`` is given).
+    A warm hit skips the O(delta*m) truss/coloring preprocessing entirely;
+    ``stats`` (a :class:`~repro.core.engine_np.Stats`) records
+    ``plan_cache_hit`` and the cold-path ``plan_build_s``.
+
+    Thread-safe: concurrent misses on the same key may both build (the
+    last insert wins) but never corrupt the cache; plans themselves are
+    read-only after their table is built.
+    """
+    if order not in ("truss", "hybrid", "color"):
+        raise ValueError(f"unknown edge-tile mode: {order}")
+    key = plan_key(g, order)
+    with _PLAN_CACHE_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _PLAN_CACHE.move_to_end(key)
+    family = "color" if order == "color" else "truss"
+    if plan is not None and family in plan._tables:
+        if stats is not None:
+            stats.plan_cache_hit = True
+        return plan
+    if cache_dir is not None:
+        plan = load_plan(os.path.join(cache_dir, key))
+        if plan is not None and family in plan._tables:
+            if stats is not None:
+                stats.plan_cache_hit = True
+            _plan_cache_insert(key, plan)
+            return plan
+    t0 = time.perf_counter()
+    plan = build_plan(g, order=order)
+    if stats is not None:
+        stats.plan_build_s += time.perf_counter() - t0
+    if cache_dir is not None:
+        save_plan(plan, os.path.join(cache_dir, key))
+    _plan_cache_insert(key, plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
 # vectorized chunk packing
 # ---------------------------------------------------------------------------
 
@@ -343,26 +509,31 @@ def _greedy_color_chunk(D: np.ndarray, sz: np.ndarray
     degk = np.where(real, deg, -1)
     order = np.lexsort((-ids, -degk), axis=1)
     colors = np.zeros((B, T), dtype=np.int64)
-    rows = np.arange(B)
     for t in range(int(sz.max(initial=0))):
-        v = order[:, t]
-        act = t < sz
-        nb = D[rows, v]                                   # (B, T)
-        ncol = np.where(nb, colors, 0)
-        present = np.zeros((B, T + 2), dtype=bool)
-        present[rows[:, None], ncol] = True
+        # step t touches only tiles with a t-th vertex; indexing the active
+        # subset keeps per-step work O(#active * T), not O(B * T) -- the
+        # dominant win on mixed-size bins (bench_pipeline_stages)
+        act = np.nonzero(t < sz)[0]
+        v = order[act, t]
+        nb = D[act, v]                                    # (A, T)
+        ncol = np.where(nb, colors[act], 0)
+        present = np.zeros((act.size, T + 2), dtype=bool)
+        present[np.arange(act.size)[:, None], ncol] = True
         mex = np.argmin(present[:, 1:], axis=1) + 1       # first free >= 1
-        colors[rows[act], v[act]] = mex[act]
+        colors[act, v] = mex
     perm = np.lexsort((ids, -colors), axis=1)
     return colors, perm
 
 
 def _relabel_chunk(D, V, colors, perm):
-    B = D.shape[0]
-    rows = np.arange(B)
-    D2 = D[rows[:, None, None], perm[:, :, None], perm[:, None, :]]
-    V2 = V[rows[:, None], perm]
-    C2 = colors[rows[:, None], perm]
+    # one flat gather for the (B, T, T) permute (measurably faster than
+    # both a chained take_along_axis and the triple-broadcast fancy index)
+    B, T = V.shape
+    idx = (perm[:, :, None] * T + perm[:, None, :]).reshape(B, T * T)
+    D2 = np.take_along_axis(D.reshape(B, T * T), idx, axis=1) \
+        .reshape(B, T, T)
+    V2 = np.take_along_axis(V, perm, axis=1)
+    C2 = np.take_along_axis(colors, perm, axis=1)
     return D2, V2, C2
 
 
@@ -466,12 +637,23 @@ def iter_tiles(source: Union[Graph, PipelinePlan], k: int,
     yield from _tiles_from_ids(plan.g, table, ids, mode)
 
 
+def default_pack_workers() -> int:
+    """Auto worker count for the parallel pack producer: a small pool,
+    leaving one core for the consumer/device side (packing is numpy-bound
+    and releases the GIL, but past a few threads the front-end saturates
+    host memory bandwidth -- and on CPU-device hosts the packers share
+    cores with the kernels themselves)."""
+    return max(1, min(4, (os.cpu_count() or 2) - 1))
+
+
 def stream_batches(source: Union[Graph, PipelinePlan], k: int,
                    order: str = "hybrid", use_rule2: bool = True,
                    batch_size: int = 256,
                    bins: Sequence[int] = BINS,
-                   timings: Optional[Dict[str, float]] = None
-                   ) -> Iterator[Union[TileBatch, Tile]]:
+                   timings: Optional[Dict[str, float]] = None,
+                   pack_workers: Optional[int] = 0,
+                   prefetch: Optional[int] = None,
+                   stats=None) -> Iterator[Union[TileBatch, Tile]]:
     """Stream fixed-shape packed batches (plus oversize spill tiles).
 
     Tiles are routed to the smallest bin T >= size and packed
@@ -480,6 +662,19 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
     the caller to spill to the host recursion.  When ``timings`` is given,
     "extract" (table build + select) and "pack" seconds are accumulated
     into it.
+
+    ``pack_workers`` turns the serial packer into a producer/consumer
+    pipeline: a thread pool packs up to ``prefetch`` chunks ahead of the
+    consumer (default ``2 * workers``), so host packing of batch i+N
+    overlaps whatever the consumer does with batch i (device dispatch, in
+    the engines).  ``0`` = pack inline (the serial reference behavior);
+    ``None`` = :func:`default_pack_workers`.  The yielded sequence is
+    **identical** in content and order either way -- work items are
+    submitted and harvested strictly FIFO -- and peak host memory grows
+    only by the prefetch window.  With ``stats`` given (a
+    :class:`~repro.core.engine_np.Stats`), ``pack_workers``,
+    ``frontend_s`` (extract + pack seconds; worker CPU-seconds when
+    parallel), and the prefetch-queue occupancy fields are recorded.
     """
     if order not in ("truss", "hybrid", "color"):
         raise ValueError(f"unknown edge-tile mode: {order}")
@@ -492,18 +687,66 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
     ids = table.select(k, use_rule2=use_rule2)
     sizes = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)
     binidx = np.searchsorted(np.asarray(bins), sizes)
+    extract_s = time.perf_counter() - t0
     if timings is not None:
-        timings["extract"] = timings.get("extract", 0.0) \
-            + (time.perf_counter() - t0)
+        timings["extract"] = timings.get("extract", 0.0) + extract_s
+    if stats is not None:
+        stats.frontend_s += extract_s
     for tid in ids[binidx == len(bins)]:
         yield from _tiles_from_ids(plan.g, table, np.asarray([tid]), order)
+
+    def bill_pack(dt: float) -> None:
+        if timings is not None:
+            timings["pack"] = timings.get("pack", 0.0) + dt
+        if stats is not None:
+            stats.frontend_s += dt
+
+    # the work list (bin, chunk) is cheap to materialize -- only index
+    # arrays -- and fixes the deterministic yield order up front
+    work: List[Tuple[int, np.ndarray]] = []
     for bi, T in enumerate(bins):
         sel = ids[binidx == bi]
         for c0 in range(0, sel.size, batch_size):
+            work.append((T, sel[c0:c0 + batch_size]))
+    workers = default_pack_workers() if pack_workers is None \
+        else max(0, int(pack_workers))
+    serial = workers == 0 or len(work) <= 1
+    if stats is not None:
+        # report what actually ran: the <=1-work-item fallback is serial
+        stats.pack_workers = 0 if serial else workers
+    if serial:
+        for T, chunk in work:
             t1 = time.perf_counter()
-            batch = _pack_batch(plan.g, table, sel[c0:c0 + batch_size], T,
-                                order)
-            if timings is not None:
-                timings["pack"] = timings.get("pack", 0.0) \
-                    + (time.perf_counter() - t1)
+            batch = _pack_batch(plan.g, table, chunk, T, order)
+            bill_pack(time.perf_counter() - t1)
             yield batch
+        return
+
+    def pack_job(T: int, chunk: np.ndarray) -> Tuple[TileBatch, float]:
+        t1 = time.perf_counter()
+        return (_pack_batch(plan.g, table, chunk, T, order),
+                time.perf_counter() - t1)
+
+    depth = max(2, 2 * workers) if prefetch is None else max(1, int(prefetch))
+    occ_sum, occ_n, occ_peak = 0.0, 0, 0
+    ex = concurrent.futures.ThreadPoolExecutor(max_workers=workers)
+    try:
+        it = iter(work)
+        futs: Deque = collections.deque(
+            ex.submit(pack_job, T, chunk)
+            for T, chunk in itertools.islice(it, depth))
+        while futs:
+            occ_peak = max(occ_peak, len(futs))
+            occ_sum += len(futs) / depth
+            occ_n += 1
+            batch, dt = futs.popleft().result()
+            nxt = next(it, None)
+            if nxt is not None:
+                futs.append(ex.submit(pack_job, *nxt))
+            bill_pack(dt)
+            yield batch
+    finally:
+        ex.shutdown(wait=False, cancel_futures=True)
+        if stats is not None and occ_n:
+            stats.pack_queue_occupancy = occ_sum / occ_n
+            stats.pack_queue_peak = occ_peak

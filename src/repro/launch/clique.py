@@ -78,6 +78,14 @@ def main():
                          "(key 'cliques'); default is an in-memory buffer")
     ap.add_argument("--max-out", type=int, default=None,
                     help="with --list: stop after this many cliques")
+    ap.add_argument("--pack-workers", type=int, default=None,
+                    help="parallel pack-producer threads (default auto; "
+                         "0 = serial inline packing)")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persist the PipelinePlan (truss order + tile "
+                         "tables) under DIR, keyed by graph content: a "
+                         "repeated invocation on the same graph skips the "
+                         "O(delta m) decomposition entirely")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
     args = ap.parse_args()
@@ -92,8 +100,14 @@ def main():
         mesh = make_local_mesh((n_dev, 1), axes=("data", "model"))
 
     t0 = time.time()
-    plan = pipeline.build_plan(g, order=args.order)
+    plan_stats = Stats()
+    plan = pipeline.cached_plan(g, order=args.order,
+                                cache_dir=args.plan_cache, stats=plan_stats)
     t_plan = time.time() - t0
+    if args.plan_cache:
+        src = "warm (decomposition skipped)" if plan_stats.plan_cache_hit \
+            else f"cold (built in {plan_stats.plan_build_s:.2f}s, saved)"
+        print(f"plan cache [{args.plan_cache}]: {src}")
 
     if args.list_mode:
         sink = (listing.NpzSink(args.sink, args.k, max_out=args.max_out)
@@ -104,6 +118,7 @@ def main():
             plan, args.k, sink, order=args.order,
             batch_size=args.batch_size, devices=devices,
             backend=args.backend,
+            pack_workers=args.pack_workers,
             async_staging=not args.sync_staging)
         t_list = time.time() - t0
         sink.close()
@@ -115,7 +130,10 @@ def main():
               f"{', -> ' + args.sink if args.sink else ''})")
         print(f"tiles={res.tiles} spilled={st.spilled_tiles} "
               f"overflowed={st.overflowed_tiles} devices={n_dev} "
-              f"backend={st.backend} compile={st.kernel_compile_s:.2f}s")
+              f"backend={st.backend} compile={st.kernel_compile_s:.2f}s "
+              f"pack_workers={st.pack_workers} "
+              f"frontend={st.frontend_s:.2f}s "
+              f"queue_occ={st.pack_queue_occupancy:.2f}")
         if args.verify:
             ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
             want = ref if args.max_out is None else min(args.max_out, ref)
@@ -126,7 +144,9 @@ def main():
     stage = {}
     stream = pipeline.stream_batches(plan, args.k, order=args.order,
                                      batch_size=args.batch_size,
-                                     timings=stage)
+                                     timings=stage,
+                                     pack_workers=args.pack_workers,
+                                     stats=stats)
     t0 = time.time()
     info = {}
     n_batches = 0
@@ -180,7 +200,9 @@ def main():
           f"backend={stats.backend} compile={stats.kernel_compile_s:.2f}s")
     print(f"k={args.k}: {total} cliques "
           f"(plan {t_plan:.2f}s, front-to-finish {t_count:.2f}s, "
-          f"of which extract+pack {t_pack:.2f}s)")
+          f"of which extract+pack {t_pack:.2f}s; "
+          f"pack_workers={stats.pack_workers} "
+          f"queue_occ={stats.pack_queue_occupancy:.2f})")
     if args.verify:
         ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
         print(f"host engine: {ref}  match={ref == total}")

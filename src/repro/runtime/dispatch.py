@@ -32,9 +32,11 @@ form), so a 1-device CPU CI run is byte-identical to an N-device run.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import functools
 import itertools
+import threading
 import time
 from typing import Deque, List, Optional, Sequence, Tuple, Union
 
@@ -168,6 +170,32 @@ def _pad_rows(x: np.ndarray, multiple: int) -> np.ndarray:
     if not pad:
         return x
     return np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+
+
+def _consume_stream(disp, stream, on_spill, stop=None) -> Tuple[int, int]:
+    """Shared stream-consumption loop of both dispatchers' ``consume``.
+
+    Submits packed batches, routes oversize spill tiles to ``on_spill``,
+    and stops early when ``stop()`` turns true (the listing sink's
+    ``full``).  Returns (tiles consumed, max tile width).
+    """
+    ntiles = 0
+    max_tile = 0
+    for item in stream:
+        if stop is not None and stop():
+            break
+        if isinstance(item, pipeline.TileBatch):
+            ntiles += item.B
+            max_tile = max(max_tile, item.T)
+            disp.submit(item)
+            continue
+        if on_spill is None:
+            raise ValueError("oversize tile in stream but no on_spill "
+                             "handler given")
+        ntiles += 1
+        max_tile = max(max_tile, item.s)
+        on_spill(item)
+    return ntiles, max_tile
 
 
 @dataclasses.dataclass
@@ -339,6 +367,18 @@ class Dispatcher:
         while self._inflight:
             self._harvest_one()
 
+    def consume(self, stream, on_spill=None) -> Tuple[int, int]:
+        """Drive this dispatcher from a ``pipeline.stream_batches`` iterator.
+
+        The single consumption point shared by counting and listing: both
+        engines hand the dispatcher the (possibly parallel-producer)
+        stream and the dispatcher pulls from its bounded prefetch queue,
+        submitting packed batches and routing oversize spill tiles to
+        ``on_spill``.  Returns (tiles consumed, max tile width); call
+        :meth:`finish` afterwards to drain.
+        """
+        return _consume_stream(self, stream, on_spill)
+
     def finish(self) -> int:
         """Drain all in-flight work; returns the accumulated exact count."""
         from ..kernels import ops as kops
@@ -346,6 +386,12 @@ class Dispatcher:
         self._drain()
         self.stats.kernel_compile_s += kops.consume_compile_s()
         return self.total
+
+
+#: initial emit-buffer rows for the speculative capacity ratchet (pow2;
+#: small enough that a wrong first guess wastes little, large enough that
+#: sparse tile batches never retry)
+SPECULATIVE_CAP0 = 64
 
 
 def _is_ready(x) -> bool:
@@ -362,28 +408,46 @@ class ListDispatcher:
     """Emit-mode twin of :class:`Dispatcher` for the listing subsystem.
 
     Streams packed tile batches across the local device set and harvests
-    (count, overflow, buffer) triples instead of scalar partials.  Each
-    batch runs a two-phase device step on its LPT-chosen device: a count
-    pass sizes the emit buffer (pow2-rounded, capped -- see
-    ``repro.core.listing.capacity_for``), then the listing kernel fills it.
+    (count, overflow, buffer) triples instead of scalar partials.  Three
+    capacity modes size the per-tile emit buffer:
 
-    The two phases are **pipelined, not serialized**: ``submit`` launches
-    the count pass asynchronously and queues the batch as *pending*; the
-    listing kernel is launched as soon as that batch's counts land on the
-    host (probed non-blockingly via ``jax.Array.is_ready`` each submit, or
-    forced when the in-flight window fills).  The host therefore never
-    sits in a count-pass fence while other devices are idle -- the
-    serialization that made 4-device listing slower than 1-device before
-    this restructure.  Harvest/decode of completed triples likewise
-    overlaps device execution of later batches.
+    * ``capacity=None`` / ``"sized"`` (default) -- exact per-batch sizing
+      by a pipelined count pass: ``submit`` launches the count pass
+      asynchronously and queues the batch as *pending*; the listing
+      kernel is launched as soon as that batch's counts land on the host
+      (probed non-blockingly via ``jax.Array.is_ready`` each submit, or
+      forced when the in-flight window fills).  Minimal buffer memory,
+      two device passes.
+    * ``capacity="speculative"`` -- the listing kernel launches
+      immediately at a per-tile-width capacity ratchet (the pow2 ceiling
+      of every true count seen so far for that T, starting at
+      ``SPECULATIVE_CAP0``).  The kernel always returns true counts, so a
+      guess that proves too small is retried once on the device at the
+      exact pow2 size (``Stats.emit_retries``) -- the answer is
+      identical, only the work moves.  One device pass per batch instead
+      of two, but the buffer rides in the DFS ``while_loop`` carry, so an
+      over-ratcheted capacity taxes every loop iteration -- measured
+      slower than "sized" on the lax/CPU backend, hence opt-in.
+    * ``capacity=<int>`` -- pinned buffer; overflowed tiles re-list on
+      the host (never truncated), as always.
 
-    Ordering guarantee: pending batches are promoted strictly FIFO and
-    harvested strictly FIFO, so decoded rows reach the sink
+    Harvest/decode of completed triples overlaps device execution of
+    later batches in every mode.
+
+    Ordering guarantee: pending batches are promoted strictly FIFO,
+    harvested strictly FIFO, and decoded/emitted by **one** decode-worker
+    thread consuming a FIFO queue, so decoded rows reach the sink
     deterministically **in batch order** no matter how many devices
     executed them or how staging overlapped (asserted by
-    ``tests/test_dispatch.py::test_list_dispatcher_sink_order_deterministic``).
-    Overflowed tiles are re-listed on the host at harvest time (never
-    truncated); the shard_map mesh path is counting-only.
+    ``tests/test_dispatch.py::test_list_dispatcher_sink_order_deterministic``
+    and stress-tested under adversarial readiness schedules in
+    ``tests/test_determinism.py``).  The decode worker also owns the
+    blocking wait for each device triple, so decode, overflow re-lists,
+    and sink writes all overlap both device execution and the consumer
+    thread's submit/promote work; its backlog is bounded
+    (``max_inflight * n_devices`` jobs) because each job pins its device
+    buffers.  Overflowed tiles are re-listed on the host at decode time
+    (never truncated); the shard_map mesh path is counting-only.
     """
 
     def __init__(
@@ -409,6 +473,10 @@ class ListDispatcher:
             raise ValueError("dispatch requires l >= 1 (k >= 3)")
         if sink is None:
             raise ValueError("emit mode requires a CliqueSink")
+        if isinstance(capacity, str) and capacity not in ("sized",
+                                                          "speculative"):
+            raise ValueError(f"capacity must be None, 'sized', "
+                             f"'speculative', or an int, got {capacity!r}")
         self.l = l
         self.sink = sink
         self.stats = stats if stats is not None else Stats()
@@ -419,6 +487,10 @@ class ListDispatcher:
         self.max_capacity = (
             listing.MAX_CAPACITY if max_capacity is None else int(max_capacity)
         )
+        # speculative mode: pow2 capacity ratchet per tile width.  Written
+        # by the decode worker (true counts), read by submit; a stale read
+        # is harmless -- it only costs one device retry.
+        self._cap_ratchet: dict = {}
         self.et_t = et_t
         self.interpret = interpret
         self.backend = backend
@@ -440,29 +512,53 @@ class ListDispatcher:
         self._inflight: Deque[Tuple[int, pipeline.TileBatch, tuple]] = (
             collections.deque()
         )
+        # ONE decode worker: harvest hands (batch, triple) jobs to it, so
+        # blocking on device results, decoding, overflow re-lists, and
+        # sink emission all overlap the consumer thread's submit/promote
+        # work -- and a single worker consuming a FIFO queue preserves
+        # the deterministic sink order by construction
+        self._decode_ex = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="emit-decode"
+        )
+        self._decoding: Deque[concurrent.futures.Future] = collections.deque()
+        self._decode_depth = max(2, self.max_inflight * len(self.devices))
+        # stats/stage_times are written by both the consumer thread
+        # (sizing waits) and the decode worker (decode/emit seconds)
+        self._acct_lock = threading.Lock()
 
     @property
     def n_devices(self) -> int:
         return len(self.devices)
 
     def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
-        """Stage one batch: async count pass, deferred list-kernel launch."""
+        """Stage one batch and launch its (first) device pass."""
+        from ..kernels import ops as kops
+
         d = int(np.argmin(self._loads)) if device is None else int(device)
         cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
         self._loads[d] += cost
         A = jax.device_put(batch.A, self.devices[d])
         cand = jax.device_put(batch.cand, self.devices[d])
-        if self.capacity is None:
-            # non-blocking: readiness is probed at promotion time
-            hard = self._count_step(A, cand)[0]
-        else:
-            hard = None
         self.placements.append(d)
         self.tiles += batch.B
         tiles, flops = self.stats.device_tiles, self.stats.device_flops
         tiles[d] = tiles.get(d, 0) + batch.B
         flops[d] = flops.get(d, 0) + batch_flops(batch.B, batch.T)
-        self._pending.append((d, batch, (A, cand, hard)))
+        if self.capacity is None or self.capacity == "sized":
+            # async count pass; readiness is probed at promotion time
+            hard = self._count_step(A, cand)[0]
+            self._pending.append((d, batch, (A, cand, hard)))
+        else:
+            if self.capacity == "speculative":  # ratchet guess
+                cap = min(self._cap_ratchet.get(batch.T, SPECULATIVE_CAP0),
+                          self.max_capacity)
+            else:
+                cap = max(1, int(self.capacity))
+            out = kops.list_tiles(
+                A, cand, self.l, capacity=cap,
+                backend=self.backend, interpret=self.interpret,
+            )
+            self._inflight.append((d, batch, (A, cand), out))
         self._promote(block=False)
         if not self.async_staging:
             self._drain()
@@ -474,7 +570,9 @@ class ListDispatcher:
                 self._harvest_one()
 
     def _promote(self, block: bool) -> None:
-        """Launch list kernels for pending batches, strictly FIFO.
+        """Launch list kernels for pending count-sized batches, strictly
+        FIFO (``capacity="sized"`` mode only; the other modes launch in
+        ``submit``).
 
         With ``block=False`` only batches whose count pass already landed
         are promoted; ``block=True`` forces at least the queue head
@@ -485,18 +583,17 @@ class ListDispatcher:
 
         while self._pending:
             d, batch, (A, cand, hard) = self._pending[0]
-            if hard is None:
-                cap = max(1, int(self.capacity))
-            else:
-                if not block and not _is_ready(hard):
-                    break
-                t0 = time.perf_counter()
-                counts = np.asarray(hard)  # blocks only until THIS batch
-                if self.stage_times is not None:
+            if not block and not _is_ready(hard):
+                break
+            t0 = time.perf_counter()
+            counts = np.asarray(hard)  # blocks only until THIS batch
+            if self.stage_times is not None:
+                with self._acct_lock:
                     self.stage_times["device"] = (
-                        self.stage_times.get("device", 0.0) + time.perf_counter() - t0
+                        self.stage_times.get("device", 0.0)
+                        + time.perf_counter() - t0
                     )
-                cap = listing.capacity_for(counts, self.max_capacity)
+            cap = listing.capacity_for(counts, self.max_capacity)
             self._pending.popleft()
             out = kops.list_tiles(
                 A,
@@ -506,43 +603,111 @@ class ListDispatcher:
                 backend=self.backend,
                 interpret=self.interpret,
             )
-            self._inflight.append((d, batch, out))
+            self._inflight.append((d, batch, (A, cand), out))
             block = False  # only the head is ever forced
 
-    def _harvest_one(self) -> None:
+    def _decode_job(self, batch: pipeline.TileBatch, acand: tuple,
+                    out: tuple) -> None:
+        """Runs on the decode worker: block for the device triple, decode
+        to global rows (incl. overflow re-lists), feed the sink.  Only
+        this thread ever touches the sink or ``emitted_cliques`` /
+        ``overflowed_tiles``, so FIFO submission == deterministic sink
+        order with no further synchronization."""
         from ..core import listing
+        from ..kernels import ops as kops
 
-        if not self._inflight:
-            self._promote(block=True)
-        _, batch, out = self._inflight.popleft()
         t0 = time.perf_counter()
-        bufs, cnt, ovf = (np.asarray(x) for x in out)  # blocks
+        bufs, cnt, ovf = (np.asarray(x) for x in out)  # blocks in worker
+        if self.capacity == "speculative":
+            # the kernel reported true counts, so a too-small guess is
+            # retried once on the device at the exact pow2 size --
+            # identical triples, never a host re-list unless the true
+            # count exceeds max_capacity (as in every mode)
+            true_cap = listing.capacity_for(cnt, self.max_capacity)
+            self._cap_ratchet[batch.T] = max(
+                self._cap_ratchet.get(batch.T, 1), true_cap
+            )
+            if ovf.any() and true_cap > bufs.shape[1]:
+                A, cand = acand
+                out2 = kops.list_tiles(
+                    A, cand, self.l, capacity=true_cap,
+                    backend=self.backend, interpret=self.interpret,
+                )
+                bufs, cnt, ovf = (np.asarray(x) for x in out2)
+                with self._acct_lock:
+                    self.stats.emit_retries += 1
         t1 = time.perf_counter()
         arr = listing.decode_batch(
             batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
         )
-        self.stats.emitted_cliques += self.sink.emit(arr)
+        emitted = self.sink.emit(arr)
         t2 = time.perf_counter()
-        # decode/emit of this batch overlapped device work of later
-        # batches; promote any counts that landed meanwhile before the
-        # next (possibly blocking) harvest
+        with self._acct_lock:
+            self.stats.emitted_cliques += emitted
+            if self.stage_times is not None:
+                st = self.stage_times
+                st["device"] = st.get("device", 0.0) + (t1 - t0)
+                st["emit"] = st.get("emit", 0.0) + (t2 - t1)
+
+    def emit_rows(self, arr: np.ndarray) -> None:
+        """Enqueue host-produced rows (spill tiles) through the decode
+        worker, keeping their FIFO position relative to batch decodes."""
+
+        def job() -> None:
+            emitted = self.sink.emit(arr)
+            with self._acct_lock:
+                self.stats.emitted_cliques += emitted
+
+        self._decoding.append(self._decode_ex.submit(job))
+
+    def _harvest_one(self) -> None:
+        if not self._inflight:
+            self._promote(block=True)
+        _, batch, acand, out = self._inflight.popleft()
+        # decode + emit run on the decode worker, overlapping device
+        # execution AND this thread's submit/promote work
+        self._decoding.append(
+            self._decode_ex.submit(self._decode_job, batch, acand, out)
+        )
+        # promote any counts that landed meanwhile, then bound the decode
+        # backlog (it holds references to device buffers)
         self._promote(block=False)
-        if self.stage_times is not None:
-            st = self.stage_times
-            st["device"] = st.get("device", 0.0) + (t1 - t0)
-            st["emit"] = st.get("emit", 0.0) + (t2 - t1)
+        while len(self._decoding) > self._decode_depth:
+            self._decoding.popleft().result()
 
     def _drain(self) -> None:
         while self._pending or self._inflight:
             self._harvest_one()
+        while self._decoding:
+            self._decoding.popleft().result()
+
+    def consume(self, stream, on_spill=None) -> Tuple[int, int]:
+        """Emit-mode twin of :meth:`Dispatcher.consume`.
+
+        Pulls from the (possibly parallel-producer) stream, submitting
+        packed batches and routing oversize spill tiles to ``on_spill``
+        (which must route their rows through :meth:`emit_rows` so stream
+        order is preserved).  Stops early once the sink reports ``full``.
+        Returns (tiles consumed, max tile width).
+        """
+        return _consume_stream(self, stream, on_spill,
+                               stop=lambda: self.sink.full)
 
     def finish(self) -> int:
         """Drain all in-flight batches; returns rows accepted by the sink."""
         from ..kernels import ops as kops
 
         self._drain()
+        self._decode_ex.shutdown(wait=True)
         self.stats.kernel_compile_s += kops.consume_compile_s()
         return self.sink.accepted
+
+    def close(self) -> None:
+        """Best-effort teardown for error paths: cancel queued decode
+        jobs and stop the worker WITHOUT draining devices, so the sink
+        stops receiving rows once the caller is handling a failure.
+        Idempotent; a no-op after a clean :meth:`finish`."""
+        self._decode_ex.shutdown(wait=False, cancel_futures=True)
 
 
 def dispatch_scheduled(

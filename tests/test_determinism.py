@@ -1,0 +1,157 @@
+"""Randomized-delay determinism stress for the emission pipeline.
+
+The ListDispatcher promotes pending batches when their emit-sizing count
+pass "lands", probed non-blockingly via ``dispatch._is_ready``.  Real
+device timing is nondeterministic, so these tests *force* the adversarial
+schedules by monkeypatching the probe: always-cold (nothing ever looks
+ready -- promotion only happens under backpressure or at drain), seeded
+random flakiness, and always-hot.  Under every schedule, combined with
+every pack-worker count, prefetch depth, staging mode, and the local
+device count, the sink output must stay **byte-identical in batch order**
+to the serial single-device reference.
+"""
+import jax
+import numpy as np
+
+from repro.core import ebbkc, listing, pipeline
+from repro.data import rmat_graph
+from repro.runtime import dispatch as dsp
+
+N_DEV = jax.device_count()
+
+_REAL_IS_READY = dsp._is_ready
+
+
+def _flaky_probe(seed: int):
+    rnd = np.random.default_rng(seed)
+    return lambda x: bool(rnd.random() < 0.5) and _REAL_IS_READY(x)
+
+
+def _graph():
+    return rmat_graph(8, 4, seed=7)
+
+
+def _run(g, k, **kwargs):
+    sink = listing.ArraySink(k)
+    res = listing.stream_cliques(g, k, sink, **kwargs)
+    return sink.result(), res.stats
+
+
+def test_harvest_determinism_under_randomized_delays(monkeypatch):
+    """Sweep readiness schedules x worker counts x prefetch depths x
+    staging x device counts: identical arrays, not just identical sets."""
+    g = _graph()
+    k = 4
+    base, base_stats = _run(g, k, devices=1, pack_workers=0, batch_size=32)
+    assert base.shape[0] == ebbkc.count(g, k).count
+    probes = [("cold", lambda x: False), ("hot", lambda x: True),
+              ("flaky3", _flaky_probe(3)), ("flaky11", _flaky_probe(11))]
+    configs = [
+        dict(devices=N_DEV, pack_workers=0),
+        dict(devices=N_DEV, pack_workers=2, prefetch=1),
+        dict(devices=N_DEV, pack_workers=3, prefetch=8),
+        dict(devices=N_DEV, pack_workers=2, async_staging=False),
+        dict(devices=1, pack_workers=4, max_inflight=1),
+        # explicit exact sizing (alias of the default): the _is_ready
+        # probe gates promotion
+        dict(devices=N_DEV, pack_workers=2, capacity="sized"),
+        # speculative ratchet + retry path
+        dict(devices=N_DEV, pack_workers=2, capacity="speculative",
+             max_inflight=1),
+    ]
+    for pname, probe in probes:
+        monkeypatch.setattr(dsp, "_is_ready", probe)
+        for cfg in configs:
+            got, stats = _run(g, k, batch_size=32, **cfg)
+            assert np.array_equal(got, base), (pname, cfg)
+            assert stats.emitted_cliques == base_stats.emitted_cliques
+
+
+def test_determinism_under_overflow_and_fixed_capacity(monkeypatch):
+    """The overflow -> host re-list path must splice rows back in batch
+    order even when promotion timing is adversarial."""
+    g = _graph()
+    k = 4
+    base, _ = _run(g, k, devices=1, pack_workers=0, batch_size=16)
+    monkeypatch.setattr(dsp, "_is_ready", _flaky_probe(5))
+    for cap in (2, 8):  # tiny fixed capacities force overflow re-lists
+        got, stats = _run(g, k, devices=N_DEV, pack_workers=2,
+                          batch_size=16, capacity=cap)
+        assert np.array_equal(got, base), cap
+    monkeypatch.setattr(dsp, "_is_ready", lambda x: False)
+    got, stats = _run(g, k, devices=N_DEV, pack_workers=3, batch_size=16)
+    assert np.array_equal(got, base)
+
+
+def test_speculative_capacity_retries_are_invisible(monkeypatch):
+    """A deliberately tiny initial capacity guess forces device retries;
+    the output must stay byte-identical and the retries accounted."""
+    g = _graph()
+    k = 4
+    base, _ = _run(g, k, devices=1, pack_workers=0, batch_size=16)
+    monkeypatch.setattr(dsp, "SPECULATIVE_CAP0", 1)
+    got, stats = _run(g, k, devices=N_DEV, pack_workers=2, batch_size=16,
+                      capacity="speculative")
+    assert np.array_equal(got, base)
+    assert stats.emit_retries > 0
+    assert stats.overflowed_tiles == 0  # retried on device, not the host
+    # the ratchet makes later batches of the same width right-sized, so
+    # retries stay far below the batch count
+    n_batches = sum(1 for b in pipeline.stream_batches(g, k, batch_size=16)
+                    if isinstance(b, pipeline.TileBatch))
+    assert stats.emit_retries < n_batches
+
+
+def test_parallel_producer_is_order_deterministic():
+    """stream_batches yields the identical batch sequence for every
+    worker count / prefetch depth (the determinism contract the sink
+    ordering builds on)."""
+    g = _graph()
+    ref = [b for b in pipeline.stream_batches(g, 5, batch_size=16)]
+    for workers, depth in ((1, 1), (2, 2), (3, 8), (4, None)):
+        got = [b for b in pipeline.stream_batches(
+            g, 5, batch_size=16, pack_workers=workers, prefetch=depth)]
+        assert len(got) == len(ref), (workers, depth)
+        for a, b in zip(ref, got):
+            assert type(a) is type(b)
+            if isinstance(a, pipeline.TileBatch):
+                for f in ("A", "cand", "sizes", "nedges", "anchors",
+                          "verts"):
+                    assert np.array_equal(getattr(a, f), getattr(b, f)), \
+                        (workers, depth, f)
+
+
+def test_capacity_aliases_work_on_every_path():
+    """The string capacity modes must not crash the single-device path
+    (they fall back to exact sizing there), and speculative mode must
+    honor max_capacity."""
+    g = _graph()
+    k = 4
+    base, _ = _run(g, k, devices=1, pack_workers=0, batch_size=32)
+    for cap in ("sized", "speculative"):
+        for dev in (None, 1, N_DEV):
+            got, _ = _run(g, k, devices=dev, batch_size=32, capacity=cap)
+            assert np.array_equal(got, base), (cap, dev)
+    import pytest
+
+    with pytest.raises(ValueError, match="capacity"):
+        _run(g, k, devices=1, capacity="bogus")
+    # max_capacity below the initial guess: the guess must clamp, and
+    # over-capacity tiles re-list on the host exactly as in every mode
+    got, stats = _run(g, k, devices=N_DEV, batch_size=32,
+                      capacity="speculative", max_capacity=4)
+    assert np.array_equal(got, base)
+
+
+def test_early_close_shuts_down_producer():
+    """Abandoning a parallel stream (sink.full / consumer break) must not
+    leak or deadlock the worker pool."""
+    g = _graph()
+    stream = pipeline.stream_batches(g, 4, batch_size=8, pack_workers=2)
+    first = next(stream)
+    assert first is not None
+    stream.close()  # must return promptly, cancelling queued work
+    # a bounded sink stops the producer the same way through the engine
+    sink = listing.ArraySink(4, max_out=5)
+    listing.stream_cliques(g, 4, sink, devices=N_DEV, pack_workers=2)
+    assert sink.accepted == 5

@@ -235,6 +235,36 @@ def test_list_dispatcher_overlaps_count_pass():
 # tests/test_pipeline.py::test_spill_interacts_with_multi_device_dispatch
 
 
+def test_consume_drives_both_dispatchers():
+    """Both dispatchers share one stream-consumption point: packed batches
+    are submitted, spill tiles routed to on_spill, tiles/max_tile
+    accounted -- and a spill without a handler is an error."""
+    from repro.core import listing
+
+    g = rmat_graph(8, 4, seed=7)
+    k = 4
+    ref = ebbkc.count(g, k).count
+    disp = dsp.Dispatcher(k - 2, devices=N_DEV, stats=Stats())
+    ntiles, max_tile = disp.consume(
+        pipeline.stream_batches(g, k, batch_size=32, pack_workers=2))
+    assert disp.finish() == ref
+    assert ntiles == sum(b.B for b in pipeline.stream_batches(g, k))
+    assert max_tile in pipeline.BINS
+    # oversize tiles demand a spill handler
+    dense = erdos_renyi(44, 0.97, seed=2)
+    disp2 = dsp.Dispatcher(2, devices=1, stats=Stats())
+    with pytest.raises(ValueError, match="on_spill"):
+        disp2.consume(pipeline.stream_batches(dense, 4, bins=(32,)))
+    disp2.finish()
+    sink = listing.ArraySink(k)
+    ldisp = dsp.ListDispatcher(k - 2, devices=N_DEV, sink=sink,
+                               stats=Stats())
+    ldisp.consume(pipeline.stream_batches(g, k, batch_size=32,
+                                          pack_workers=2))
+    ldisp.finish()
+    assert sink.accepted == ref
+
+
 def test_plan_reuse_across_device_counts():
     """One PipelinePlan serves queries at any device count (the serving
     scenario: preprocessing paid once, dispatch chosen per query)."""

@@ -106,6 +106,130 @@ def test_plan_reuse_skips_preprocessing(rng):
     assert r2.count == ebbkc.count(g, 5).count
 
 
+@pytest.mark.parametrize("mode", ["truss", "color", "hybrid"])
+def test_parallel_producer_matches_serial(mode):
+    """pack_workers > 0 yields the byte-identical batch stream (content
+    AND order), spill tiles included, for every ordering."""
+    g = rmat_graph(8, 4, seed=7)
+    for bins, batch_size in (((32, 64, 128, 256), 16), ((32,), 8)):
+        ref = list(pipeline.stream_batches(g, 5, order=mode, bins=bins,
+                                           batch_size=batch_size))
+        got = list(pipeline.stream_batches(g, 5, order=mode, bins=bins,
+                                           batch_size=batch_size,
+                                           pack_workers=3, prefetch=4))
+        assert len(ref) == len(got)
+        for a, b in zip(ref, got):
+            assert type(a) is type(b)
+            if isinstance(a, pipeline.TileBatch):
+                assert np.array_equal(a.A, b.A)
+                assert np.array_equal(a.cand, b.cand)
+                assert np.array_equal(a.verts, b.verts)
+                assert np.array_equal(a.anchors, b.anchors)
+            else:
+                assert a.anchor == b.anchor and a.rows == b.rows
+
+
+def test_parallel_producer_stats_and_timings():
+    from repro.core.engine_np import Stats
+
+    g = rmat_graph(8, 4, seed=7)
+    stats = Stats()
+    timings = {}
+    n = sum(1 for _ in pipeline.stream_batches(
+        g, 5, batch_size=16, pack_workers=2, prefetch=3,
+        timings=timings, stats=stats))
+    assert n > 1
+    assert stats.pack_workers == 2
+    assert stats.frontend_s > 0.0
+    assert stats.frontend_s >= timings.get("pack", 0.0)
+    assert 0.0 < stats.pack_queue_occupancy <= 1.0
+    assert 1 <= stats.pack_queue_peak <= 3
+    # serial path reports workers=0 and no queue
+    s2 = Stats()
+    list(pipeline.stream_batches(g, 5, batch_size=16, pack_workers=0,
+                                 stats=s2))
+    assert s2.pack_workers == 0 and s2.pack_queue_peak == 0
+    assert s2.frontend_s > 0.0
+
+
+def test_plan_cache_warm_queries_skip_decomposition(monkeypatch):
+    """Acceptance: a warm plan-cached query never reaches the O(delta*m)
+    truss decomposition, and Stats says so."""
+    from repro.core import engine_jax as ej
+
+    g = rmat_graph(7, 4, seed=3)
+    ref4 = ebbkc.count(g, 4).count
+    ref5 = ebbkc.count(g, 5).count
+    pipeline.clear_plan_cache()
+    r1 = ej.count(g, 4)
+    assert not r1.stats.plan_cache_hit
+    assert r1.stats.plan_build_s > 0.0
+    assert r1.count == ref4
+
+    def boom(*a, **kw):  # pragma: no cover - must never run
+        raise AssertionError("truss decomposition re-ran on a warm query")
+
+    monkeypatch.setattr(pipeline, "truss_decomposition", boom)
+    # warm: same graph content, different k and even a different Graph
+    # object (the key is content-addressed)
+    r2 = ej.count(g, 5)
+    assert r2.stats.plan_cache_hit and r2.stats.plan_build_s == 0.0
+    assert r2.count == ref5
+    g2 = rmat_graph(7, 4, seed=3)
+    r3 = ej.count(g2, 4, devices=1)
+    assert r3.stats.plan_cache_hit and r3.count == ref4
+    # truss-order queries share the hybrid family table
+    r4 = ej.count(g, 4, order="truss")
+    assert r4.stats.plan_cache_hit
+    # a cold cache really does rebuild (the tripwire fires)
+    with pytest.raises(AssertionError, match="re-ran"):
+        pipeline.clear_plan_cache()
+        ej.count(g, 4)
+
+
+def test_plan_save_load_roundtrip(tmp_path):
+    g = rmat_graph(7, 4, seed=3)
+    pipeline.clear_plan_cache()
+    plan = pipeline.build_plan(g, order="hybrid")
+    plan.table("color")  # persist both families
+    path = str(tmp_path / "plan")
+    pipeline.save_plan(plan, path)
+    got = pipeline.load_plan(path)
+    assert got is not None
+    assert got.g.n == g.n and np.array_equal(got.g.edges, g.edges)
+    assert got.td.tau == plan.td.tau  # decomposition restored, not rebuilt
+    for family in ("truss", "color"):
+        a, b = plan.table(family), got.table(family)
+        for f in ("edge_id", "anchors", "offsets", "verts", "thresh",
+                  "ekeys"):
+            assert np.array_equal(getattr(a, f), getattr(b, f)), (family, f)
+    for k in (4, 5):
+        assert ebbkc.count(g, k, plan=got).count == ebbkc.count(g, k).count
+    assert pipeline.load_plan(str(tmp_path / "nope")) is None
+
+
+def test_plan_cache_dir_warms_across_processes(tmp_path, monkeypatch):
+    """cache_dir simulates the restarted-process path: clear the
+    in-process cache, reload from disk, decomposition still skipped."""
+    from repro.core.engine_np import Stats
+
+    g = rmat_graph(7, 4, seed=9)
+    ref = ebbkc.count(g, 4).count
+    cache = str(tmp_path / "plans")
+    pipeline.clear_plan_cache()
+    s1 = Stats()
+    pipeline.cached_plan(g, "hybrid", cache_dir=cache, stats=s1)
+    assert not s1.plan_cache_hit and s1.plan_build_s > 0.0
+    pipeline.clear_plan_cache()  # "new process"
+    monkeypatch.setattr(
+        pipeline, "truss_decomposition",
+        lambda *a, **kw: (_ for _ in ()).throw(AssertionError("re-ran")))
+    s2 = Stats()
+    plan = pipeline.cached_plan(g, "hybrid", cache_dir=cache, stats=s2)
+    assert s2.plan_cache_hit and s2.plan_build_s == 0.0
+    assert ebbkc.count(g, 4, plan=plan).count == ref
+
+
 def test_scheduler_batches_partition(rng):
     g = random_graph(rng, n_lo=25, n_hi=35, p_lo=0.5, p_hi=0.8)
     batches = [b for b in pipeline.stream_batches(g, 4, batch_size=4)
