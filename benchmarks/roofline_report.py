@@ -1,6 +1,16 @@
 """Render the EXPERIMENTS.md roofline table from dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+
+With ``--bench BENCH.json`` (a ``benchmarks.run --json`` artifact) the
+report instead renders a *measured* kernel roofline: achieved FLOP/s and
+bytes/s from each record's ``device_flops`` / ``device_bytes`` (the
+packed ``(B, T, W)`` staging layout, accounted by the dispatcher) over
+its device-stage seconds, next to the TPU-model projection for the same
+work -- so the dry-run projections and the live kernel benchmarks share
+one table format.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report --bench BENCH_pr6.json
 """
 from __future__ import annotations
 
@@ -56,11 +66,60 @@ def table(mesh: str, out="artifacts/dryrun"):
     return "\n".join(rows)
 
 
+def bench_table(bench_path: str) -> str:
+    """Measured kernel roofline from a ``benchmarks.run --json`` artifact.
+
+    Per record (count / listing rows that carry the accounting fields):
+    achieved FLOP/s = ``device_flops`` / device-stage seconds, achieved
+    bytes/s = ``device_bytes`` (the packed ``(B, T*W + W)`` uint32 tile
+    layout staged to devices) over the same seconds, the arithmetic
+    intensity, and the TPU-model projection (``launch.roofline``) for the
+    identical work.  Rows without kernel-stage accounting are skipped.
+    """
+    from repro.launch.roofline import (HBM_BW, PEAK_FLOPS, roofline_terms)
+
+    with open(bench_path) as f:
+        records = json.load(f)["records"]
+    rows = [
+        "| record | phase | kernel_s | GFLOP | MB | achieved GFLOP/s | "
+        "achieved GB/s | FLOP/byte | TPU bound | dominant |",
+        "|" + "---|" * 10,
+    ]
+    skipped = 0
+    for r in records:
+        flops = r.get("device_flops") or 0
+        nbytes = r.get("device_bytes") or 0
+        secs = r.get("kernel_seconds") or 0
+        if not flops or not secs:
+            skipped += 1
+            continue
+        name = (f"{r.get('kind', 'count')}/{r['graph']}/k{r['k']}"
+                f"/{r.get('backend', '?')}/dev{r['devices']}")
+        t = roofline_terms(flops, nbytes, 0.0)
+        rows.append(
+            f"| {name} | {r.get('phase') or '--'} | {fmt_s(secs)} "
+            f"| {flops / 1e9:.2f} | {nbytes / 1e6:.2f} "
+            f"| {flops / secs / 1e9:.2f} | {nbytes / secs / 1e9:.2f} "
+            f"| {flops / max(nbytes, 1):.1f} | {fmt_s(t['bound_s'])} "
+            f"| {t['dominant'][:-2]} |")
+    rows.append(f"\nmodel: {PEAK_FLOPS / 1e12:.0f} TFLOP/s, "
+                f"{HBM_BW / 1e9:.0f} GB/s HBM; {skipped} records without "
+                "kernel-stage accounting skipped")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--bench", default=None, metavar="JSON",
+                    help="render the measured-kernel roofline from a "
+                         "benchmarks.run --json artifact instead of the "
+                         "dry-run table")
     args = ap.parse_args()
+    if args.bench:
+        print(bench_table(args.bench))
+        return
     print(table(args.mesh, args.out))
 
 

@@ -96,7 +96,16 @@ def main():
                          "each snapshot's truss order + tile tables "
                          "instead of re-decomposing (keyed by graph "
                          "content, see pipeline.cached_plan)")
+    ap.add_argument("--tune-cache", default=None, metavar="DIR",
+                    help="persistent autotuner directory (repro.tune): "
+                         "a restarted service reuses tuned backend/geometry "
+                         "records and XLA's persistent compilation cache "
+                         "instead of re-measuring and re-compiling")
     args = ap.parse_args()
+    if args.tune_cache:
+        from repro import tune
+
+        tune.configure(args.tune_cache)
 
     start = 0
     got = restore_checkpoint(args.ckpt, {"done": jnp.zeros((), jnp.int32)})

@@ -36,8 +36,27 @@ from . import tiles as tiles_mod
 from .bitops import pack_rows, pack_mask
 from ..kernels import ops as kops
 from ..kernels.common import pascal_table, popcount, unpack_bits
+from ..tune import search as tune_search
 
 _BINS = pipeline.BINS
+
+
+def bucket_rows(x: np.ndarray) -> np.ndarray:
+    """Zero-pad axis 0 up to the next power of two (batch-shape bucketing).
+
+    Ragged tail chunks of a bin then reuse the pow2-batch executables the
+    full chunks already compiled, instead of compiling one executable per
+    distinct tail length.  Padding rows have ``cand == 0``, contributing
+    exactly 0 to kernel counts, the closed-form 2-plex count, and the
+    listing buffers (callers slice the padded rows off before decode).
+    """
+    B = x.shape[0]
+    p = 1
+    while p < B:
+        p *= 2
+    if p == B:
+        return x
+    return np.concatenate([x, np.zeros((p - B,) + x.shape[1:], x.dtype)])
 
 
 @dataclasses.dataclass
@@ -200,7 +219,8 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
           use_rule2: bool = True, method: str = "auto",
           interpret: Optional[bool] = None, et_route: bool = True,
           plan: Optional[pipeline.PipelinePlan] = None,
-          batch_size: int = 256, bins: Sequence[int] = _BINS,
+          batch_size: Optional[int] = None,
+          bins: Optional[Sequence[int]] = None,
           stage_times: Optional[Dict[str, float]] = None,
           devices=None, async_staging: bool = True,
           backend: Optional[str] = None,
@@ -236,6 +256,12 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     forces synchronous staging).  ``devices=None`` keeps the single-device
     inline path.  Counts are identical either way -- device partials are
     combined exactly on the host.
+
+    Geometry knobs left ``None`` (``batch_size``, ``bins``,
+    ``pack_workers``, ``prefetch``) resolve through the persistent
+    autotuner (:func:`repro.tune.search.resolve_geometry`): explicit
+    argument > persisted geometry record > the historical hardcoded
+    defaults.  The count is identical under every geometry.
     """
     from .ebbkc import Result
     stats = Stats()
@@ -252,12 +278,16 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
     max_tile = 0
     l = k - 2
     et = et_route and et_t >= 2
+    geom = tune_search.resolve_geometry(
+        "count", l, batch_size=batch_size, bins=bins,
+        pack_workers=pack_workers, prefetch=prefetch)
     stream = pipeline.stream_batches(plan or g, k, order=order,
                                      use_rule2=use_rule2,
-                                     batch_size=batch_size, bins=bins,
+                                     batch_size=geom.batch_size,
+                                     bins=geom.bins,
                                      timings=stage_times,
-                                     pack_workers=pack_workers,
-                                     prefetch=prefetch, stats=stats)
+                                     pack_workers=geom.pack_workers,
+                                     prefetch=geom.prefetch, stats=stats)
     if devices is not None:
         from ..runtime.dispatch import Dispatcher
         disp = Dispatcher(l, devices, et=et, method=method,
@@ -277,6 +307,7 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
         finally:
             stream.close()  # stops parallel-producer workers on error too
         stats.kernel_compile_s += kops.consume_compile_s()
+        kops.drain_tune_events(stats)
         return Result(total, stats, ntiles, max_tile)
     for item in stream:
         if isinstance(item, tiles_mod.Tile):
@@ -287,8 +318,11 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
         ntiles += item.B
         max_tile = max(max_tile, item.T)
         t0 = time.perf_counter()
+        # batch-shape bucketing: ragged tail chunks pad to pow2 so they
+        # reuse the executables of the full chunks (padding counts 0)
         hard, nv, t, f = count_packed(
-            jnp.asarray(item.A), jnp.asarray(item.cand), l,
+            jnp.asarray(bucket_rows(item.A)),
+            jnp.asarray(bucket_rows(item.cand)), l,
             method=method, et=et, interpret=interpret, backend=backend)
         if stage_times is not None:
             # async dispatch: block so device time is not billed to combine
@@ -300,4 +334,5 @@ def count(g: Graph, k: int, order: str = "hybrid", et_t: int = 3,
             stage_times["combine"] = stage_times.get("combine", 0.) \
                 + time.perf_counter() - t1
     stats.kernel_compile_s += kops.consume_compile_s()
+    kops.drain_tune_events(stats)
     return Result(total, stats, ntiles, max_tile)

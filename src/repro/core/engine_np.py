@@ -79,6 +79,16 @@ class Stats:
     # build time (0.0 on warm queries)
     plan_cache_hit: bool = False
     plan_build_s: float = 0.0
+    # persistent autotuner (repro.tune): wall seconds spent in live tuning
+    # measurements during this query (0.0 warm), and whether every tuning
+    # lookup was answered from a cache layer -- False when a live
+    # microbenchmark had to run, or when nothing consulted the tuner at all
+    tune_s: float = 0.0
+    tune_cache_hit: bool = False
+    # device ordinal -> packed bytes staged there ((B,T,W) adjacency plus
+    # (B,W) candidate masks); the roofline bandwidth denominator paired
+    # with device_flops
+    device_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:

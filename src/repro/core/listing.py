@@ -39,6 +39,7 @@ from .graph import ragged_expand
 from . import pipeline
 from . import tiles as tiles_mod
 from ..kernels import ops as kops
+from ..tune import search as tune_search
 
 #: default cap on the per-tile emit buffer (rows); tiles whose true count
 #: exceeds it overflow to the host spill path instead of growing VMEM
@@ -236,18 +237,30 @@ def decode_batch(
 # ---------------------------------------------------------------------------
 
 
-def capacity_for(counts: np.ndarray, max_capacity: int = MAX_CAPACITY) -> int:
-    """Emit-buffer rows for a batch: pow2 ceil of the max per-tile count.
+def capacity_for(
+    counts: np.ndarray, max_capacity: int = MAX_CAPACITY, policy: str = "pow2"
+) -> int:
+    """Emit-buffer rows for a batch, rounded up under ``policy``.
 
-    Power-of-two rounding keeps the number of distinct (T, capacity) kernel
-    shapes -- and hence jit recompiles -- logarithmic; ``max_capacity``
-    bounds VMEM, overflowing the rare monster tile to the host spill path
-    instead.
+    ``"pow2"`` (default) keeps the number of distinct (T, capacity) kernel
+    shapes -- and hence jit recompiles -- logarithmic; ``"mult64"`` rounds
+    to the next multiple of 64, trading more signatures for up to 2x less
+    buffer riding the DFS carry.  Which wins is hardware-dependent, so the
+    geometry tuner (:mod:`repro.tune.search`) owns the choice.
+    ``max_capacity`` bounds VMEM either way, overflowing the rare monster
+    tile to the host spill path instead.
     """
     m = int(np.asarray(counts).max(initial=1))
-    cap = 1
-    while cap < m:
-        cap *= 2
+    if policy == "mult64":
+        cap = -(-m // 64) * 64
+    elif policy == "pow2":
+        cap = 1
+        while cap < m:
+            cap *= 2
+    else:
+        raise ValueError(
+            f"unknown capacity policy {policy!r}; expected 'pow2' or 'mult64'"
+        )
     return max(1, min(cap, int(max_capacity)))
 
 
@@ -276,18 +289,28 @@ def list_batch(
     *,
     capacity: Optional[int] = None,
     max_capacity: int = MAX_CAPACITY,
+    cap_policy: str = "pow2",
     interpret: Optional[bool] = None,
     backend: Optional[str] = None,
     et_t: int = 3,
 ) -> np.ndarray:
-    """Single-device emit step: count pass -> sized list kernel -> decode."""
-    A = jnp.asarray(batch.A)
-    cand = jnp.asarray(batch.cand)
+    """Single-device emit step: count pass -> sized list kernel -> decode.
+
+    The batch axis is padded to a power of two before the kernels so
+    ragged tail chunks reuse the full-batch executables; the padded
+    zero-candidate lanes count 0, never overflow, and are sliced off
+    before decode.
+    """
+    from .engine_jax import bucket_rows
+
+    B = batch.B
+    A = jnp.asarray(bucket_rows(batch.A))
+    cand = jnp.asarray(bucket_rows(batch.cand))
     if capacity is None:
         counts = np.asarray(
             kops.count_tiles(A, cand, l, backend=backend, interpret=interpret)
         )
-        cap = capacity_for(counts, max_capacity)
+        cap = capacity_for(counts, max_capacity, policy=cap_policy)
     else:
         cap = max(1, int(capacity))
     bufs, cnt, ovf = kops.list_tiles(
@@ -295,9 +318,9 @@ def list_batch(
     )
     return decode_batch(
         batch,
-        np.asarray(bufs),
-        np.asarray(cnt),
-        np.asarray(ovf),
+        np.asarray(bufs)[:B],
+        np.asarray(cnt)[:B],
+        np.asarray(ovf)[:B],
         l,
         stats,
         et_t=et_t,
@@ -312,10 +335,11 @@ def stream_cliques(
     order: str = "hybrid",
     use_rule2: bool = True,
     et_t: int = 3,
-    batch_size: int = 256,
-    bins: Sequence[int] = pipeline.BINS,
+    batch_size: Optional[int] = None,
+    bins: Optional[Sequence[int]] = None,
     capacity: Optional[int] = None,
-    max_capacity: int = MAX_CAPACITY,
+    max_capacity: Optional[int] = None,
+    cap_policy: Optional[str] = None,
     devices=None,
     async_staging: bool = True,
     max_inflight: int = 2,
@@ -347,6 +371,13 @@ def stream_cliques(
     way), and a Graph ``source`` consults the keyed plan cache
     (``plan_cache=False`` opts out; ``plan_cache_dir`` adds the on-disk
     store) so warm queries skip the O(delta*m) decomposition.
+
+    Geometry knobs left ``None`` (``batch_size``, ``bins``,
+    ``max_capacity``, ``cap_policy``, ``pack_workers``, ``prefetch``)
+    resolve through the persistent autotuner
+    (:func:`repro.tune.search.resolve_geometry`): explicit argument >
+    persisted geometry record > the historical hardcoded defaults.  The
+    emitted row stream is identical under every geometry.
     """
     if k < 3:
         raise ValueError("stream_cliques requires k >= 3")
@@ -362,6 +393,16 @@ def stream_cliques(
     stats.backend = kops.resolve_backend(backend, interpret)
     res = ListResult(stats)
     l = k - 2
+    geom = tune_search.resolve_geometry(
+        "list",
+        l,
+        batch_size=batch_size,
+        bins=bins,
+        cap_policy=cap_policy,
+        max_capacity=max_capacity,
+        pack_workers=pack_workers,
+        prefetch=prefetch,
+    )
     if not isinstance(source, pipeline.PipelinePlan) and plan_cache:
         source = pipeline.cached_plan(source, order=order,
                                       cache_dir=plan_cache_dir, stats=stats)
@@ -370,11 +411,11 @@ def stream_cliques(
         k,
         order=order,
         use_rule2=use_rule2,
-        batch_size=batch_size,
-        bins=bins,
+        batch_size=geom.batch_size,
+        bins=geom.bins,
         timings=stage_times,
-        pack_workers=pack_workers,
-        prefetch=prefetch,
+        pack_workers=geom.pack_workers,
+        prefetch=geom.prefetch,
         stats=stats,
     )
     if devices is not None:
@@ -386,7 +427,8 @@ def stream_cliques(
             sink=sink,
             stats=stats,
             capacity=capacity,
-            max_capacity=max_capacity,
+            max_capacity=geom.max_capacity,
+            cap_policy=geom.cap_policy,
             interpret=interpret,
             backend=backend,
             async_staging=async_staging,
@@ -428,7 +470,8 @@ def stream_cliques(
                     l,
                     stats,
                     capacity=capacity,
-                    max_capacity=max_capacity,
+                    max_capacity=geom.max_capacity,
+                    cap_policy=geom.cap_policy,
                     interpret=interpret,
                     backend=backend,
                     et_t=et_t,
@@ -438,4 +481,5 @@ def stream_cliques(
             stream.close()  # shuts down any parallel-producer workers
     stats.sink_bytes += sink.bytes_written
     stats.kernel_compile_s += kops.consume_compile_s()
+    kops.drain_tune_events(stats)
     return res

@@ -648,8 +648,8 @@ def default_pack_workers() -> int:
 
 def stream_batches(source: Union[Graph, PipelinePlan], k: int,
                    order: str = "hybrid", use_rule2: bool = True,
-                   batch_size: int = 256,
-                   bins: Sequence[int] = BINS,
+                   batch_size: Optional[int] = None,
+                   bins: Optional[Sequence[int]] = None,
                    timings: Optional[Dict[str, float]] = None,
                    pack_workers: Optional[int] = 0,
                    prefetch: Optional[int] = None,
@@ -678,7 +678,12 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
     """
     if order not in ("truss", "hybrid", "color"):
         raise ValueError(f"unknown edge-tile mode: {order}")
-    bins = tuple(sorted(int(b) for b in bins))
+    # None = the historical defaults; the engines resolve tuned geometry
+    # (repro.tune.search.resolve_geometry) before calling in, so this
+    # module stays tuner-agnostic
+    if batch_size is None:
+        batch_size = 256
+    bins = tuple(sorted(int(b) for b in (BINS if bins is None else bins)))
     if any(b % 32 for b in bins):
         raise ValueError("bins must be multiples of 32")
     plan = _as_plan(source)

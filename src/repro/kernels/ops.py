@@ -13,14 +13,22 @@ served by one of several interchangeable backends:
 * ``"ref"`` -- the pure-jnp expansion oracles (:mod:`repro.kernels.ref`,
   counting only; memory O(B * T^(l-2)), tests/cross-checks).
 * ``"auto"`` (default) -- Mosaic Pallas on TPU, lax everywhere else.
-* ``"autotune"`` -- one-shot per-(mode, l, T) microbenchmark between the
-  pallas and lax backends, cached for the process lifetime.
+* ``"autotune"`` -- per-(device kind, mode, l, T, capacity bucket)
+  microbenchmark between the pallas and lax backends.  Winners are cached
+  in-process and, when a tune-cache directory is configured
+  (:mod:`repro.tune.cache`), persisted across processes as
+  :class:`~repro.tune.records.TuningRecord` files -- a warm process never
+  re-measures.
 
 Selection precedence: explicit ``backend=`` argument > the
 ``REPRO_BACKEND`` environment variable (read per call; lets CI flip the
 whole suite without touching call sites) > the deprecated ``interpret=``
 alias (``interpret=True/False`` selects the Pallas backend with that
-interpret flag, the pre-registry API) > ``"auto"``.
+interpret flag, the pre-registry API) > ``"auto"``.  Inside an autotune
+resolution the same ladder continues: a concrete ``REPRO_BACKEND`` value
+beats a persisted record beats the live microbenchmark -- so the env knob
+overrides stale tuning state even when a call site pins
+``backend="autotune"``.
 
 The module also accounts kernel compile time: the first invocation per
 (function, backend, shape) signature is timed synchronously and accrued to
@@ -48,7 +56,11 @@ BACKENDS = ("auto", "pallas", "lax", "ref", "autotune")
 #: env var consulted when no explicit ``backend=`` is passed
 BACKEND_ENV = "REPRO_BACKEND"
 
-_AUTOTUNE_CACHE: Dict[Tuple[str, int, int], str] = {}
+#: in-process autotune winners, keyed (device_kind, mode, l, T, cap_bucket)
+#: -- the capacity bucket and device kind are part of the key (PR-6 fix):
+#: a winner measured at one capacity regime or on one device kind is never
+#: served to another
+_AUTOTUNE_CACHE: Dict[Tuple[str, str, int, int, int], str] = {}
 _COMPILE_S = 0.0
 _SEEN_SIGNATURES = set()
 
@@ -81,41 +93,57 @@ def resolve_backend(backend: Optional[str] = None,
     return "pallas" if jax.default_backend() == "tpu" else "lax"
 
 
-def autotune_backend(mode: str, l: int, T: int, trials: int = 2) -> str:
-    """One-shot microbenchmark: fastest of lax vs pallas for (mode, l, T).
+def autotune_backend(mode: str, l: int, T: int,
+                     capacity: Optional[int] = None,
+                     trials: int = 2) -> str:
+    """Backend winner for one kernel signature, cheapest source first.
 
-    Runs each candidate on a tiny synthetic half-dense batch (compile
-    excluded via a warmup call) and caches the winner for the process.
+    Resolution ladder (the tail of the module-docstring precedence):
+
+    1. a *concrete* ``REPRO_BACKEND`` value -- the env knob overrides any
+       cached or persisted winner, even under an explicit
+       ``backend="autotune"`` argument;
+    2. the in-process winner cache, keyed
+       ``(device_kind, mode, l, T, capacity bucket)``;
+    3. a persisted :class:`~repro.tune.records.TuningRecord` from the
+       configured tune-cache directory (cross-process warm start);
+    4. the live lax-vs-pallas microbenchmark
+       (:func:`repro.tune.search.microbench_backend`), whose winner is
+       written back through layers 2-3.
+
+    Lookups and microbenchmark seconds accrue to the tuning-event
+    accumulator (:func:`repro.tune.cache.note_event`) that engines drain
+    into ``Stats.tune_s`` / ``tune_cache_hit``.
     """
     global _COMPILE_S
-    key = (mode, l, T)
+    env = os.environ.get(BACKEND_ENV) or None
+    if env is not None and env in BACKENDS and env not in ("auto", "autotune"):
+        return env
+    from .. import tune
+    from ..tune import search as tune_search
+
+    key = (tune.device_kind(), mode, int(l), int(T),
+           tune.capacity_bucket(capacity if mode == "list" else None))
     got = _AUTOTUNE_CACHE.get(key)
     if got is not None:
+        tune.note_event(lookup=True)
         return got
+    rkey = tune.backend_key(mode, l, T,
+                            capacity if mode == "list" else None)
+    rec = tune.get(rkey)
+    if rec is not None and rec.data.get("winner") in ("lax", "pallas"):
+        best = rec.data["winner"]
+        _AUTOTUNE_CACHE[key] = best
+        tune.note_event(lookup=True)
+        return best
     # park compile seconds accrued by earlier *real* kernel calls so the
     # drain below discards only the microbenchmark's own compiles
     pending = consume_compile_s()
-    rng = np.random.default_rng(0)
-    B, W = 4, T // 32
-    dense = rng.random((B, T, T)) < 0.5
-    dense = np.triu(dense, 1)
-    dense = dense | dense.transpose(0, 2, 1)
-    from ..core.bitops import pack_bits
-    A = pack_bits(dense)
-    cand = pack_bits(np.ones((B, T), dtype=bool))
-    best, best_t = "lax", float("inf")
-    for b in ("lax", "pallas"):
-        def run():
-            if mode == "list":
-                return list_tiles(A, cand, l, capacity=64, backend=b)
-            return count_tiles(A, cand, l, backend=b)
-        jax.block_until_ready(run())  # warmup: compile outside the timing
-        t0 = time.perf_counter()
-        for _ in range(trials):
-            jax.block_until_ready(run())
-        dt = (time.perf_counter() - t0) / trials
-        if dt < best_t:
-            best, best_t = b, dt
+    t0 = time.perf_counter()
+    best, times = tune_search.microbench_backend(mode, l, T,
+                                                 capacity=capacity,
+                                                 trials=trials)
+    tune_s = time.perf_counter() - t0
     # the microbenchmark compiled both candidates through the registry;
     # drain those first-call seconds so they are not billed to whatever
     # engine query happened to trigger the autotune, then restore the
@@ -123,10 +151,18 @@ def autotune_backend(mode: str, l: int, T: int, trials: int = 2) -> str:
     consume_compile_s()
     _COMPILE_S += pending
     _AUTOTUNE_CACHE[key] = best
+    tune.note_event(seconds=tune_s, lookup=True, miss=True)
+    tune.put(tune.TuningRecord(
+        "backend", key[0], tune.jax_version(), mode, int(l), T=int(T),
+        W=int(T) // 32,
+        cap_bucket=tune.capacity_bucket(capacity if mode == "list" else None),
+        data={"winner": best, "times": times, "trials": trials,
+              "tune_s": tune_s}))
     return best
 
 
 def clear_autotune_cache() -> None:
+    """Drop in-process autotune winners (persisted records survive)."""
     _AUTOTUNE_CACHE.clear()
 
 
@@ -135,6 +171,31 @@ def consume_compile_s() -> float:
     global _COMPILE_S
     v, _COMPILE_S = _COMPILE_S, 0.0
     return v
+
+
+def consume_tune_events() -> tuple:
+    """Drain tuning events -> ``(tune_s, lookups, misses)``.
+
+    Engines call this next to :func:`consume_compile_s` and derive
+    ``Stats.tune_cache_hit = lookups > 0 and misses == 0``.
+    """
+    from .. import tune
+
+    return tune.consume_events()
+
+
+def drain_tune_events(stats) -> None:
+    """Drain tuning events into a ``Stats`` at an engine drain point.
+
+    A drain that saw no events leaves ``tune_cache_hit`` untouched -- the
+    engines and the dispatchers share one Stats and both drain, so only
+    the drain that actually collected the query's lookups gets to decide
+    the flag (hit = every lookup answered from a cache layer).
+    """
+    tune_s, lookups, misses = consume_tune_events()
+    stats.tune_s += tune_s
+    if lookups or misses:
+        stats.tune_cache_hit = misses == 0
 
 
 def _arg_device(x) -> str:
@@ -182,7 +243,7 @@ def count_tiles(A: jax.Array, cand: jax.Array, l: int,
         # closed forms, no kernel needed on any backend
         return _ref.clique_count_tiles_ref(A, cand, l)
     if b == "autotune":
-        b = autotune_backend("count", l, T)
+        b = autotune_backend("count", l, T)  # counting: capacity n/a
     if b == "lax" and method == "auto":
         return _timed_first_call(("count", "lax", l, A.shape),
                                  lambda a, c: _lax.count_tiles(a, c, l),
@@ -217,7 +278,7 @@ def list_tiles(A: jax.Array, cand: jax.Array, l: int, capacity: int,
     if b == "ref":
         raise ValueError("the ref backend implements counting only")
     if b == "autotune":
-        b = autotune_backend("list", l, A.shape[1])
+        b = autotune_backend("list", l, A.shape[1], capacity=capacity)
     if b == "lax":
         return _timed_first_call(
             ("list", "lax", l, capacity, A.shape),

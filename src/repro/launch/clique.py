@@ -25,6 +25,8 @@ from ..data import graphs as gdata
 from ..launch.mesh import make_local_mesh
 from ..runtime.dispatch import (Dispatcher, dispatch_scheduled,
                                 resolve_devices)
+from .. import tune
+from ..tune import search as tune_search
 
 
 def load_graph(desc: str) -> Graph:
@@ -51,7 +53,9 @@ def main():
     ap.add_argument("--graph", default="rmat:12")
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--order", default="hybrid")
-    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="tiles per packed batch (default: tuned geometry "
+                         "record if present, else 256)")
     ap.add_argument("--devices", default="all",
                     help='"all" or device count (clamped to available)')
     ap.add_argument("--backend", default=None,
@@ -86,10 +90,18 @@ def main():
                          "tables) under DIR, keyed by graph content: a "
                          "repeated invocation on the same graph skips the "
                          "O(delta m) decomposition entirely")
+    ap.add_argument("--tune-cache", default=None, metavar="DIR",
+                    help="persistent autotuner directory (repro.tune): "
+                         "backend/geometry tuning records plus JAX's "
+                         "persistent compilation cache, so a repeated "
+                         "invocation skips microbenchmarks AND XLA "
+                         "compiles; also settable via REPRO_TUNE_CACHE")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
     args = ap.parse_args()
 
+    if args.tune_cache:
+        tune.configure(args.tune_cache)
     g = load_graph(args.graph)
     print(f"graph: n={g.n} m={g.m}")
     l = args.k - 2
@@ -131,6 +143,7 @@ def main():
         print(f"tiles={res.tiles} spilled={st.spilled_tiles} "
               f"overflowed={st.overflowed_tiles} devices={n_dev} "
               f"backend={st.backend} compile={st.kernel_compile_s:.2f}s "
+              f"tune={st.tune_s:.2f}s tune_hit={st.tune_cache_hit} "
               f"pack_workers={st.pack_workers} "
               f"frontend={st.frontend_s:.2f}s "
               f"queue_occ={st.pack_queue_occupancy:.2f}")
@@ -142,10 +155,15 @@ def main():
 
     stats = Stats()
     stage = {}
+    geom = tune_search.resolve_geometry("count", l,
+                                        batch_size=args.batch_size,
+                                        pack_workers=args.pack_workers)
     stream = pipeline.stream_batches(plan, args.k, order=args.order,
-                                     batch_size=args.batch_size,
+                                     batch_size=geom.batch_size,
+                                     bins=geom.bins,
                                      timings=stage,
-                                     pack_workers=args.pack_workers,
+                                     pack_workers=geom.pack_workers,
+                                     prefetch=geom.prefetch,
                                      stats=stats)
     t0 = time.time()
     info = {}
@@ -197,7 +215,8 @@ def main():
         for d in sorted(stats.device_tiles))
     print(f"device tiles/flops: {per_dev or '-'} "
           f"staging_overlap={stats.staging_overlap_s:.2f}s "
-          f"backend={stats.backend} compile={stats.kernel_compile_s:.2f}s")
+          f"backend={stats.backend} compile={stats.kernel_compile_s:.2f}s "
+          f"tune={stats.tune_s:.2f}s tune_hit={stats.tune_cache_hit}")
     print(f"k={args.k}: {total} cliques "
           f"(plan {t_plan:.2f}s, front-to-finish {t_count:.2f}s, "
           f"of which extract+pack {t_pack:.2f}s; "

@@ -84,6 +84,14 @@ def batch_flops(n_tiles: int, T: int) -> int:
     return int(n_tiles) * 2 * int(T) ** 3
 
 
+def batch_bytes(n_tiles: int, T: int) -> int:
+    """Bytes staged to a device per packed tile: the (T, W) uint32
+    adjacency bitset plus the (W,) candidate mask (W = T/32).  The
+    roofline bandwidth denominator paired with :func:`batch_flops`."""
+    W = int(T) // 32
+    return int(n_tiles) * (int(T) * W + W) * 4
+
+
 def _mesh_batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     """Axes a tile batch shards over: every non-'model' axis of the mesh."""
     axes = tuple(a for a in mesh.axis_names if a != "model")
@@ -295,11 +303,13 @@ class Dispatcher:
 
     def _account(self, per_device_tiles: np.ndarray, T: int) -> None:
         tiles, flops = self.stats.device_tiles, self.stats.device_flops
+        nbytes = self.stats.device_bytes
         for d, c in enumerate(per_device_tiles):
             if not c:
                 continue
             tiles[d] = tiles.get(d, 0) + int(c)
             flops[d] = flops.get(d, 0) + batch_flops(int(c), T)
+            nbytes[d] = nbytes.get(d, 0) + batch_bytes(int(c), T)
 
     def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
         """Stage one packed batch and launch its device step (non-blocking).
@@ -322,8 +332,10 @@ class Dispatcher:
             d = int(np.argmin(self._loads)) if device is None else int(device)
             cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
             self._loads[d] += cost
-            A = jax.device_put(batch.A, self.devices[d])
-            cand = jax.device_put(batch.cand, self.devices[d])
+            # batch-shape bucketing: ragged tail chunks pad to pow2 and
+            # reuse the full chunks' executables (padding counts 0)
+            A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
+            cand = jax.device_put(engine_jax.bucket_rows(batch.cand), self.devices[d])
             per_dev = np.zeros(self.n_devices, dtype=np.int64)
             per_dev[d] = batch.B
         out = self._run_step(A, cand, d)
@@ -385,6 +397,7 @@ class Dispatcher:
 
         self._drain()
         self.stats.kernel_compile_s += kops.consume_compile_s()
+        kops.drain_tune_events(self.stats)
         return self.total
 
 
@@ -459,6 +472,7 @@ class ListDispatcher:
         stats: Optional[Stats] = None,
         capacity: Optional[int] = None,
         max_capacity: Optional[int] = None,
+        cap_policy: str = "pow2",
         et_t: int = 3,
         interpret: Optional[bool] = None,
         backend: Optional[str] = None,
@@ -487,6 +501,7 @@ class ListDispatcher:
         self.max_capacity = (
             listing.MAX_CAPACITY if max_capacity is None else int(max_capacity)
         )
+        self.cap_policy = cap_policy  # emit-buffer rounding (tuned knob)
         # speculative mode: pow2 capacity ratchet per tile width.  Written
         # by the decode worker (true counts), read by submit; a stale read
         # is harmless -- it only costs one device retry.
@@ -537,13 +552,17 @@ class ListDispatcher:
         d = int(np.argmin(self._loads)) if device is None else int(device)
         cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
         self._loads[d] += cost
-        A = jax.device_put(batch.A, self.devices[d])
-        cand = jax.device_put(batch.cand, self.devices[d])
+        # batch-shape bucketing, as in Dispatcher.submit; the padded
+        # zero-candidate lanes are sliced off again in the decode job
+        A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
+        cand = jax.device_put(engine_jax.bucket_rows(batch.cand), self.devices[d])
         self.placements.append(d)
         self.tiles += batch.B
         tiles, flops = self.stats.device_tiles, self.stats.device_flops
         tiles[d] = tiles.get(d, 0) + batch.B
         flops[d] = flops.get(d, 0) + batch_flops(batch.B, batch.T)
+        nbytes = self.stats.device_bytes
+        nbytes[d] = nbytes.get(d, 0) + batch_bytes(batch.B, batch.T)
         if self.capacity is None or self.capacity == "sized":
             # async count pass; readiness is probed at promotion time
             hard = self._count_step(A, cand)[0]
@@ -593,7 +612,9 @@ class ListDispatcher:
                         self.stage_times.get("device", 0.0)
                         + time.perf_counter() - t0
                     )
-            cap = listing.capacity_for(counts, self.max_capacity)
+            cap = listing.capacity_for(
+                counts, self.max_capacity, policy=self.cap_policy
+            )
             self._pending.popleft()
             out = kops.list_tiles(
                 A,
@@ -617,13 +638,17 @@ class ListDispatcher:
         from ..kernels import ops as kops
 
         t0 = time.perf_counter()
-        bufs, cnt, ovf = (np.asarray(x) for x in out)  # blocks in worker
+        # slice off the bucketing padding (zero-candidate lanes) before
+        # ratchet/decode -- padding rows count 0 and never overflow
+        bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out)
         if self.capacity == "speculative":
             # the kernel reported true counts, so a too-small guess is
-            # retried once on the device at the exact pow2 size --
+            # retried once on the device at the exact rounded size --
             # identical triples, never a host re-list unless the true
             # count exceeds max_capacity (as in every mode)
-            true_cap = listing.capacity_for(cnt, self.max_capacity)
+            true_cap = listing.capacity_for(
+                cnt, self.max_capacity, policy=self.cap_policy
+            )
             self._cap_ratchet[batch.T] = max(
                 self._cap_ratchet.get(batch.T, 1), true_cap
             )
@@ -633,7 +658,7 @@ class ListDispatcher:
                     A, cand, self.l, capacity=true_cap,
                     backend=self.backend, interpret=self.interpret,
                 )
-                bufs, cnt, ovf = (np.asarray(x) for x in out2)
+                bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out2)
                 with self._acct_lock:
                     self.stats.emit_retries += 1
         t1 = time.perf_counter()
@@ -700,6 +725,7 @@ class ListDispatcher:
         self._drain()
         self._decode_ex.shutdown(wait=True)
         self.stats.kernel_compile_s += kops.consume_compile_s()
+        kops.drain_tune_events(self.stats)
         return self.sink.accepted
 
     def close(self) -> None:

@@ -1,0 +1,19 @@
+"""Persistent geometry/backend autotuner (DESIGN.md section 9).
+
+Light imports only: :mod:`~repro.tune.records` (schema + keys) and
+:mod:`~repro.tune.cache` (persisted record store + JAX compilation-cache
+wiring).  The search machinery (:mod:`~repro.tune.search`) pulls in the
+engines and is imported lazily by its callers.
+"""
+from .cache import (ENV_TUNE_CACHE, active_dir, clear_memory, configure,
+                    consume_events, enable_compilation_cache, get, note_event,
+                    put)
+from .records import (FORMAT, TuningRecord, backend_key, capacity_bucket,
+                      device_kind, geometry_key, jax_version, key_digest)
+
+__all__ = [
+    "ENV_TUNE_CACHE", "FORMAT", "TuningRecord",
+    "active_dir", "backend_key", "capacity_bucket", "clear_memory",
+    "configure", "consume_events", "device_kind", "enable_compilation_cache",
+    "geometry_key", "get", "jax_version", "key_digest", "note_event", "put",
+]

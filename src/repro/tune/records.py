@@ -1,0 +1,120 @@
+"""Tuning-record schema: what the persistent autotuner knows, versioned.
+
+A :class:`TuningRecord` is one persisted fact about the hardware this
+process runs on.  Two kinds exist (DESIGN.md section 9):
+
+* ``kind="backend"`` -- the winner of the lax-vs-pallas microbenchmark for
+  one kernel signature ``(mode, l, T, W, capacity bucket)`` on one device
+  kind.  Consulted by ``backend="autotune"`` (:mod:`repro.kernels.ops`)
+  before any live microbenchmark runs, so a warm process never re-measures.
+* ``kind="geometry"`` -- the shape knobs the pipeline keys executables on:
+  tile-width rounding policy, batch size, emit-capacity rounding and cap,
+  pack workers / prefetch depth.  Emitted by the coordinate-descent search
+  (:mod:`repro.tune.search`) and read back as the *defaults* of
+  ``stream_batches`` / ``stream_cliques`` / ``engine_jax.count`` whenever
+  the caller leaves those knobs ``None``.
+
+Records are keyed per (device kind, jax version, mode, l[, T, W, capacity
+bucket]) -- a cache warmed on one device kind or capacity regime can never
+leak a stale winner into another (the PR-6 key fix).  ``FORMAT`` is bumped
+on any schema change; readers treat a mismatched or unreadable record as
+absent and fall back to a live measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, Optional
+
+import jax
+
+#: serialized tuning-record layout version; bump on any schema change so a
+#: stale on-disk record is re-measured instead of misread
+FORMAT = 1
+
+
+def device_kind() -> str:
+    """Stable identifier of the accelerator family this process targets.
+
+    ``device_kind`` (e.g. "TPU v5e") where the runtime provides it, else
+    the platform name ("cpu", "gpu").  Part of every tuning-record key: a
+    winner measured on one device kind is never served to another.
+    """
+    try:
+        d = jax.devices()[0]
+        return str(getattr(d, "device_kind", None) or d.platform)
+    except Exception:  # pragma: no cover - no backend at all
+        return "unknown"
+
+
+def jax_version() -> str:
+    return jax.__version__
+
+
+def capacity_bucket(capacity: Optional[int]) -> int:
+    """Fold a listing capacity into its pow2 regime (-1 = counting mode).
+
+    Capacities inside one bucket share kernel executables and memory
+    behavior, so they share one tuning record; capacities in different
+    buckets (say 64 vs 16384 rows) can have different winners -- the buffer
+    rides the DFS ``while_loop`` carry, taxing every iteration.
+    """
+    if capacity is None:
+        return -1
+    return max(0, int(capacity) - 1).bit_length()
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    """One persisted tuning fact (see module docstring for the two kinds)."""
+
+    kind: str                 # "backend" | "geometry"
+    device_kind: str
+    jax_version: str
+    mode: str                 # "count" | "list"
+    l: int
+    T: int = 0                # backend records: tile width (0 = n/a)
+    W: int = 0                # backend records: word count (0 = n/a)
+    cap_bucket: int = -1      # backend records: capacity regime (-1 = count)
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def key(self) -> str:
+        """Stable record key; the on-disk store hashes it into a dirname."""
+        return (f"v{FORMAT}:{self.kind}:{self.device_kind}:"
+                f"{self.jax_version}:{self.mode}:l{self.l}:T{self.T}:"
+                f"W{self.W}:c{self.cap_bucket}")
+
+    def to_meta(self) -> Dict[str, Any]:
+        return {"format": FORMAT, "record": dataclasses.asdict(self)}
+
+    @staticmethod
+    def from_meta(meta: Dict[str, Any]) -> Optional["TuningRecord"]:
+        """Parse store metadata; None on any format/shape mismatch."""
+        if not isinstance(meta, dict) or meta.get("format") != FORMAT:
+            return None
+        rec = meta.get("record")
+        if not isinstance(rec, dict):
+            return None
+        try:
+            return TuningRecord(**rec)
+        except TypeError:
+            return None
+
+
+def backend_key(mode: str, l: int, T: int,
+                capacity: Optional[int] = None) -> str:
+    """Key of the backend-winner record for one kernel signature."""
+    return TuningRecord(
+        "backend", device_kind(), jax_version(), mode, int(l), T=int(T),
+        W=int(T) // 32, cap_bucket=capacity_bucket(capacity)).key()
+
+
+def geometry_key(mode: str, l: int) -> str:
+    """Key of the geometry record the pipeline reads its defaults from."""
+    return TuningRecord(
+        "geometry", device_kind(), jax_version(), mode, int(l)).key()
+
+
+def key_digest(key: str) -> str:
+    """Filesystem-safe digest of a record key (store subdirectory name)."""
+    return hashlib.sha256(key.encode()).hexdigest()[:24]

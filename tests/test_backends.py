@@ -175,10 +175,16 @@ def test_resolve_backend_precedence(monkeypatch):
 
 
 def test_autotune_picks_and_caches():
+    from repro import tune
+
     ops.clear_autotune_cache()
     choice = ops.autotune_backend("count", 4, 32)
     assert choice in ("lax", "pallas")
-    assert ops._AUTOTUNE_CACHE[("count", 4, 32)] == choice
+    # the key folds in the device kind (a record measured on one
+    # accelerator must not answer for another) and, for listing, the
+    # capacity bucket (the emit buffer rides the DFS carry)
+    key = (tune.device_kind(), "count", 4, 32, tune.capacity_bucket(None))
+    assert ops._AUTOTUNE_CACHE[key] == choice
     # cached: second call returns identically without re-benchmarking
     assert ops.autotune_backend("count", 4, 32) == choice
     # end to end through the registry
@@ -187,6 +193,26 @@ def test_autotune_picks_and_caches():
     got = np.asarray(ops.count_tiles(A, cand, 4, backend="autotune"))
     exp = np.asarray(ref.clique_count_tiles_ref(A, cand, 4))
     np.testing.assert_array_equal(got, exp)
+
+
+def test_autotune_key_separates_capacity_buckets():
+    """Regression: the autotune cache key must fold in (device kind,
+    capacity bucket) -- a winner measured for a tiny emit buffer must not
+    answer for a huge one (the buffer rides the DFS carry), and listing
+    must never share entries with counting."""
+    ops.clear_autotune_cache()
+    ops.autotune_backend("list", 2, 32, capacity=64)
+    ops.autotune_backend("list", 2, 32, capacity=4096)
+    ops.autotune_backend("count", 2, 32)
+    keys = list(ops._AUTOTUNE_CACHE)
+    assert len(keys) == 3, keys
+    # same signature, same bucket: served from cache, no 4th entry
+    ops.autotune_backend("list", 2, 32, capacity=64)
+    assert len(ops._AUTOTUNE_CACHE) == 3
+    # capacities rounding to the same pow2 bucket share one entry
+    ops.autotune_backend("list", 2, 32, capacity=33)
+    ops.autotune_backend("list", 2, 32, capacity=64)  # both bucket to 6
+    assert len(ops._AUTOTUNE_CACHE) == 3
 
 
 def test_lax_backend_lane_padding_is_neutral():
