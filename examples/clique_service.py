@@ -1,18 +1,21 @@
 """End-to-end driver (the paper's kind is a graph-mining operator, so the
-end-to-end application is a distributed clique-analytics service):
+end-to-end application is a multi-tenant clique-analytics service):
 
-  1. ingest a stream of graph snapshots (synthetic RMAT / power-law);
-  2. preprocess on host ONCE per snapshot: truss decomposition -> pi_tau ->
-     k-independent tile membership table (repro.core.pipeline.PipelinePlan);
-  3. answer several k-clique queries per snapshot off the same plan --
-     repeated queries skip preprocessing entirely (the serving win);
-  4. stream capacity-batched packed tiles and shard them across ALL local
-     devices (repro.runtime.dispatch: scheduler LPT bins -> real devices,
-     double-buffered host->device staging), exact host combine;
-  5. serve per-snapshot clique-density reports AND a materializing query --
-     "top-N k-cliques containing vertex v" -- off the SAME cached plan via
-     the emission subsystem (repro.core.listing), with checkpointed
-     progress so a killed service resumes at the next snapshot.
+  1. ingest a stream of graph snapshots (synthetic RMAT / power-law) and
+     register each with a long-lived ``repro.serve.CliqueService``;
+  2. submit every tenant's queries CONCURRENTLY -- exact counts at
+     several k, plus a materializing "top-N k-cliques containing vertex
+     v" listing query per snapshot, each with its own latency deadline;
+  3. the service coalesces ready tiles from different requests into
+     shared fixed-shape device batches (continuous batching: fused
+     batches reuse the same warm executables as single-query traffic),
+     schedules pulls EDF-first under the deadlines, and routes exact
+     counts / byte-identical clique rows back to per-request sinks;
+  4. preprocessing is shared: each snapshot is truss-decomposed ONCE into
+     a cached PipelinePlan (in-process keyed cache, plus an on-disk store
+     with --plan-cache so a restarted service skips it entirely);
+  5. the run ends with per-request latencies and the service's own
+     accounting (fused batches, cross-request batches, deadline misses).
 
     PYTHONPATH=src python examples/clique_service.py --snapshots 3 --k 5
     # multi-device serving on a CPU host:
@@ -22,75 +25,33 @@ end-to-end application is a distributed clique-analytics service):
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
 import numpy as np
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import engine_jax, listing, pipeline
 from repro.data import powerlaw_graph, rmat_graph
+from repro.serve import CliqueService
 
 
 def snapshot(i: int):
+    """Synthetic tenant graph stream: alternating RMAT / power-law."""
     if i % 2 == 0:
         return f"rmat-{i}", rmat_graph(11, 6, seed=100 + i)
     return f"powerlaw-{i}", powerlaw_graph(2500, 10, seed=100 + i)
 
 
-def answer_query(plan, k, devices="all", backend=None):
-    """One k-clique query off a prebuilt plan, dispatched across all local
-    devices; returns (count, n_tiles, n_spilled, staging overlap s).
-
-    ``backend`` picks the kernel implementation (repro.kernels.ops
-    registry; default auto = compiled lax on this CPU host)."""
-    r = engine_jax.count(plan.g, k, plan=plan, devices=devices,
-                         backend=backend)
-    return r.count, r.tiles, r.stats.spilled_tiles, \
-        r.stats.staging_overlap_s
-
-
-class TopNContainingSink(listing.CliqueSink):
-    """Keep the first N cliques that contain vertex v (stream order);
-    ``full`` stops the producer as soon as N are collected."""
-
-    def __init__(self, v: int, n: int, k: int):
-        super().__init__()
-        self.v, self.n = v, n
-        self._hits = listing.ArraySink(k, max_out=n)
-
-    @property
-    def full(self):
-        return self._hits.full
-
-    def emit(self, cliques):
-        self._hits.emit(cliques[(cliques == self.v).any(axis=1)])
-        return self._account(cliques)
-
-    def result(self):
-        return self._hits.result()
-
-
-def answer_topn_query(plan, k, v, topn, devices="all", backend=None):
-    """Top-N k-cliques containing vertex v, materialized off the cached
-    plan through the emission subsystem; returns ((n, k) rows, stats)."""
-    sink = TopNContainingSink(v, topn, k)
-    res = listing.stream_cliques(plan, k, sink, devices=devices,
-                                 backend=backend)
-    return sink.result(), res.stats
-
-
 def main():
+    """Ingest snapshots, serve all tenants' queries concurrently."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--snapshots", type=int, default=3)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--topn", type=int, default=5,
                     help="N for the top-N cliques-containing-v query")
+    ap.add_argument("--deadline", type=float, default=30.0, metavar="S",
+                    help="per-query latency deadline in seconds (EDF "
+                         "scheduling + miss accounting, never cancellation)")
     ap.add_argument("--backend", default=None,
                     choices=["auto", "pallas", "lax", "ref", "autotune"],
                     help="kernel backend for all queries (default auto = "
                          "compiled lax on CPU hosts)")
-    ap.add_argument("--ckpt", default="/tmp/repro_clique_service")
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="on-disk plan store: a restarted service reloads "
                          "each snapshot's truss order + tile tables "
@@ -107,52 +68,55 @@ def main():
 
         tune.configure(args.tune_cache)
 
-    start = 0
-    got = restore_checkpoint(args.ckpt, {"done": jnp.zeros((), jnp.int32)})
-    if got:
-        start = int(got["tree"]["done"])
-        print(f"resuming after snapshot {start - 1}")
-
-    for i in range(start, args.snapshots):
+    svc = CliqueService(backend=None if args.backend == "auto"
+                        else args.backend,
+                        plan_cache_dir=args.plan_cache)
+    graphs = {}
+    for i in range(args.snapshots):
         name, g = snapshot(i)
-        t0 = time.time()
-        # keyed plan cache: in-process hits are free, and with
-        # --plan-cache a restarted service skips the decomposition too
-        plan_stats = engine_jax.Stats()
-        plan = pipeline.cached_plan(g, order="hybrid",
-                                    cache_dir=args.plan_cache,
-                                    stats=plan_stats)
-        t_plan = time.time() - t0
-        report = {}
-        for k in (args.k, args.k + 1):      # two queries, one plan
-            t0 = time.time()
-            total, n_tiles, n_spill, overlap = answer_query(
-                plan, k, backend=args.backend)
-            report[k] = (total, n_tiles, n_spill, overlap, time.time() - t0)
-        tau = plan.td.tau
-        line = " ".join(
-            f"k={k}:{c} ({c / max(g.n, 1):.2f}/vertex, {dt:.2f}s, "
-            f"overlap {ov:.2f}s)"
-            for k, (c, _, _, ov, dt) in report.items())
-        n_tiles = report[args.k][1]
-        plan_src = "warm" if plan_stats.plan_cache_hit else "cold"
-        print(f"[{name}] n={g.n} m={g.m} tau={tau} tiles={n_tiles} "
-              f"devices={jax.device_count()} plan={t_plan:.2f}s "
-              f"({plan_src}) -> {line}")
-        # materializing query off the SAME plan: top-N cliques @ vertex v
+        graphs[name] = g
+        svc.register_graph(name, g)
+
+    # every tenant submits at once: two counting queries plus the top-N
+    # materializing query per snapshot, all inside one serving pipeline
+    t0 = time.time()
+    tickets = []
+    for name, g in graphs.items():
+        for k in (args.k, args.k + 1):
+            tickets.append((name, f"count k={k}",
+                            svc.submit(name, k, "count",
+                                       deadline_s=args.deadline)))
         v = int(np.argmax(g.degrees()))
-        t0 = time.time()
-        rows, lst = answer_topn_query(plan, args.k, v, args.topn,
-                                      backend=args.backend)
-        print(f"[{name}] top-{args.topn} {args.k}-cliques @ v={v}: "
-              f"{len(rows)} found ({lst.emitted_cliques} scanned, "
-              f"overflowed={lst.overflowed_tiles}, {time.time() - t0:.2f}s)"
-              + (f" first={rows[0].tolist()}" if len(rows) else ""))
-        save_checkpoint(args.ckpt, i + 1,
-                        {"done": jnp.int32(i + 1)},
-                        metadata={"snapshot": name,
-                                  "count": int(report[args.k][0])})
-    print("service drained; progress checkpointed at", args.ckpt)
+        tickets.append((name, f"top-{args.topn} {args.k}-cliques @ v={v}",
+                        svc.submit(name, args.k, "list", vertex_filter=v,
+                                   max_out=args.topn,
+                                   deadline_s=args.deadline)))
+    print(f"submitted {len(tickets)} concurrent queries over "
+          f"{len(graphs)} snapshots "
+          f"({svc.engine_stats.backend or 'auto'} backend)")
+
+    for name, what, ticket in tickets:
+        res = ticket.result()
+        late = " LATE" if res.deadline_missed else ""
+        if res.kind == "count":
+            g = graphs[name]
+            print(f"[{name}] {what}: {res.count} "
+                  f"({res.count / max(g.n, 1):.2f}/vertex, "
+                  f"{res.latency_s * 1e3:.0f}ms{late})")
+        else:
+            first = (f" first={res.rows[0].tolist()}"
+                     if res.rows.shape[0] else "")
+            print(f"[{name}] {what}: {res.rows.shape[0]} found "
+                  f"({res.latency_s * 1e3:.0f}ms{late}){first}")
+    wall = time.time() - t0
+
+    s = svc.stats
+    print(f"served {s.completed} requests in {wall:.2f}s: "
+          f"{s.fused_batches} device batches "
+          f"({s.cross_request_batches} cross-request, "
+          f"{s.fused_chunks} chunks fused, {s.spill_tiles} host spills), "
+          f"{s.deadline_missed} deadline misses")
+    svc.close()
 
 
 if __name__ == "__main__":

@@ -67,6 +67,7 @@ class PackedTiles:
 
 
 def pack_tiles(tiles: List[tiles_mod.Tile], T: int) -> PackedTiles:
+    """Pack ``tiles`` into one fixed-shape ``(B, T, W)`` bitset batch."""
     B = len(tiles)
     W = T // 32
     A = np.zeros((B, T, W), dtype=np.uint32)

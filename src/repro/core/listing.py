@@ -66,12 +66,15 @@ class CliqueSink:
 
     @property
     def full(self) -> bool:
+        """True when the sink wants no more rows (stops the producer)."""
         return False
 
     def emit(self, cliques: np.ndarray) -> int:
+        """Consume an ``(n, k)`` rows chunk; return rows accepted."""
         raise NotImplementedError
 
     def close(self) -> None:
+        """Flush/finalize; called once after the stream ends."""
         pass
 
     def _account(self, arr: np.ndarray) -> int:
@@ -88,6 +91,7 @@ class CallbackSink(CliqueSink):
         self.fn = fn
 
     def emit(self, cliques: np.ndarray) -> int:
+        """Forward a non-empty chunk to the callback; accept all rows."""
         if cliques.shape[0]:
             self.fn(cliques)
         return self._account(cliques)
@@ -104,9 +108,11 @@ class ArraySink(CliqueSink):
 
     @property
     def full(self) -> bool:
+        """True once ``max_out`` rows have been accepted."""
         return self.max_out is not None and self.accepted >= self.max_out
 
     def emit(self, cliques: np.ndarray) -> int:
+        """Buffer rows, truncating at ``max_out``; return rows kept."""
         if self.max_out is not None:
             cliques = cliques[: max(self.max_out - self.accepted, 0)]
         if cliques.shape[0]:
@@ -114,6 +120,7 @@ class ArraySink(CliqueSink):
         return self._account(cliques)
 
     def result(self) -> np.ndarray:
+        """All accepted rows as one ``(n, k) int64`` array."""
         if not self._chunks:
             return np.zeros((0, self.k), dtype=np.int64)
         return np.concatenate(self._chunks)
@@ -129,15 +136,18 @@ class NpzSink(CliqueSink):
 
     @property
     def full(self) -> bool:
+        """Delegates to the buffering inner sink."""
         return self._inner.full
 
     def emit(self, cliques: np.ndarray) -> int:
+        """Buffer rows (via an inner :class:`ArraySink`); return kept."""
         n = self._inner.emit(cliques)
         self.accepted = self._inner.accepted
         self.bytes_written = self._inner.bytes_written
         return n
 
     def close(self) -> None:
+        """Write the buffered rows to ``path`` (NPZ key ``cliques``)."""
         np.savez_compressed(self.path, cliques=self._inner.result())
 
 

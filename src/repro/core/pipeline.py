@@ -113,9 +113,11 @@ class TileTable:
 
     @property
     def ntiles(self) -> int:
+        """Number of tiles in the table."""
         return int(self.edge_id.shape[0])
 
     def sizes(self) -> np.ndarray:
+        """Per-tile candidate counts (``offsets`` diffs)."""
         return np.diff(self.offsets)
 
     def select(self, k: int, use_rule2: bool = True) -> np.ndarray:
@@ -233,17 +235,20 @@ class PipelinePlan:
 
     @property
     def td(self) -> TrussDecomposition:
+        """The graph's truss decomposition (computed lazily, cached)."""
         if self._td is None:
             self._td = truss_decomposition(self.g)
         return self._td
 
     @property
     def colors(self) -> np.ndarray:
+        """Greedy vertex coloring (computed lazily, cached)."""
         if self._colors is None:
             self._colors, _ = greedy_coloring(self.g)
         return self._colors
 
     def table(self, mode: str) -> TileTable:
+        """The (lazily built, cached) tile table for ``mode``'s family."""
         family = "color" if mode == "color" else "truss"
         if family not in self._tables:
             if family == "truss":
@@ -376,6 +381,7 @@ def _plan_cache_insert(key: str, plan: PipelinePlan) -> None:
 
 
 def clear_plan_cache() -> None:
+    """Drop every in-process cached plan (tests / memory pressure)."""
     with _PLAN_CACHE_LOCK:
         _PLAN_CACHE.clear()
 
@@ -557,6 +563,7 @@ class TileBatch:
 
     @property
     def B(self) -> int:
+        """Batch size: number of packed tiles (rows) in this batch."""
         return int(self.A.shape[0])
 
 

@@ -180,29 +180,56 @@ def _pad_rows(x: np.ndarray, multiple: int) -> np.ndarray:
     return np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
 
 
+@dataclasses.dataclass
+class Routed:
+    """One item of a multi-request stream: a pipeline item plus its route.
+
+    Wrap ``pipeline.TileBatch`` / oversize ``Tile`` items in ``Routed``
+    to interleave several logical requests through one dispatcher
+    ``consume`` call.  ``route`` is forwarded verbatim: for a
+    ``TileBatch`` it becomes the ``route=`` callback of ``submit`` (so
+    this batch's results bypass the dispatcher-global accumulator/sink
+    and are delivered to the owning request instead); for a spill tile it
+    is passed as a second argument to ``on_spill``.  Bare (unwrapped)
+    items keep the single-request behavior, so the two styles can mix in
+    one stream.
+    """
+
+    item: object
+    route: object = None
+
+
 def _consume_stream(disp, stream, on_spill, stop=None) -> Tuple[int, int]:
     """Shared stream-consumption loop of both dispatchers' ``consume``.
 
     Submits packed batches, routes oversize spill tiles to ``on_spill``,
     and stops early when ``stop()`` turns true (the listing sink's
-    ``full``).  Returns (tiles consumed, max tile width).
+    ``full``).  Items may be wrapped in :class:`Routed` to tag them with
+    a per-request route (multi-tenant streams); bare items behave as
+    before.  Returns (tiles consumed, max tile width).
     """
     ntiles = 0
     max_tile = 0
     for item in stream:
         if stop is not None and stop():
             break
+        route = None
+        if isinstance(item, Routed):
+            item, route = item.item, item.route
         if isinstance(item, pipeline.TileBatch):
             ntiles += item.B
             max_tile = max(max_tile, item.T)
-            disp.submit(item)
+            disp.submit(item, route=route)
             continue
         if on_spill is None:
             raise ValueError("oversize tile in stream but no on_spill "
                              "handler given")
         ntiles += 1
         max_tile = max(max_tile, item.s)
-        on_spill(item)
+        if route is None:
+            on_spill(item)
+        else:
+            on_spill(item, route)
     return ntiles, max_tile
 
 
@@ -212,6 +239,8 @@ class _InFlight:
 
     device: int  # device ordinal; -1 for the shard_map path
     out: Tuple[jax.Array, jax.Array, jax.Array, jax.Array]
+    rows: int = 0  # un-padded batch rows (slice bound for routed harvest)
+    route: object = None  # per-request delivery callback, or None
 
 
 class Dispatcher:
@@ -299,6 +328,7 @@ class Dispatcher:
 
     @property
     def n_devices(self) -> int:
+        """Number of devices this dispatcher places batches on."""
         return len(self.devices)
 
     def _account(self, per_device_tiles: np.ndarray, T: int) -> None:
@@ -311,12 +341,31 @@ class Dispatcher:
             flops[d] = flops.get(d, 0) + batch_flops(int(c), T)
             nbytes[d] = nbytes.get(d, 0) + batch_bytes(int(c), T)
 
-    def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
+    def submit(
+        self,
+        batch: pipeline.TileBatch,
+        device: Optional[int] = None,
+        route=None,
+    ) -> None:
         """Stage one packed batch and launch its device step (non-blocking).
 
         ``device`` forces a placement (offline scheduling); otherwise the
         batch goes to the least-loaded device under the scheduler cost
         model (online LPT).
+
+        ``route``, when given, redirects this batch's results: at harvest
+        the raw per-tile partials are fetched, sliced back to the batch's
+        un-padded ``B`` rows, and passed to ``route(hard, nv, t, f)`` as
+        int64 numpy arrays instead of being folded into ``self.total``
+        (use ``engine_jax.combine_counts`` on any row segment to finish
+        them exactly).  This is the multi-tenant seam: batches from
+        different requests share devices and warm executables while their
+        counts route back to their owners.  Routes run on the thread that
+        triggers the harvest (the submitting/draining thread).
+
+        Thread safety: all ``submit``/``drain``/``finish`` calls must come
+        from one thread; only the ``route`` callbacks themselves may hand
+        work to other threads.
         """
         if self.mesh is not None:
             d = -1
@@ -345,7 +394,7 @@ class Dispatcher:
         if not self._inflight:
             # in-flight window (re)opens now; overlap accrues from here
             self._overlap_mark = time.perf_counter()
-        self._inflight.append(_InFlight(d, out))
+        self._inflight.append(_InFlight(d, out, batch.B, route))
         if not self.async_staging:
             self._drain()
         else:
@@ -368,7 +417,12 @@ class Dispatcher:
         jax.block_until_ready(p.out)
         t1 = time.perf_counter()
         self._overlap_mark = t1  # blocked interval [t0, t1] is not overlap
-        self.total += engine_jax.combine_counts(*p.out, self.l, self.et)
+        if p.route is None:
+            self.total += engine_jax.combine_counts(*p.out, self.l, self.et)
+        else:
+            # multi-tenant: hand the un-padded partial rows to the owner
+            # (shape padding appends rows, so a head slice removes it)
+            p.route(*(np.asarray(x)[: p.rows] for x in p.out))
         t2 = time.perf_counter()
         if self.stage_times is not None:
             st = self.stage_times
@@ -386,13 +440,31 @@ class Dispatcher:
         engines hand the dispatcher the (possibly parallel-producer)
         stream and the dispatcher pulls from its bounded prefetch queue,
         submitting packed batches and routing oversize spill tiles to
-        ``on_spill``.  Returns (tiles consumed, max tile width); call
-        :meth:`finish` afterwards to drain.
+        ``on_spill``.  The stream may interleave several requests by
+        wrapping items in :class:`Routed` -- routed batches deliver their
+        partials to their own route callback instead of ``self.total``,
+        and routed spills call ``on_spill(tile, route)``.  Returns
+        (tiles consumed, max tile width); call :meth:`finish` (one-shot)
+        or :meth:`drain` (long-lived service) afterwards.
         """
         return _consume_stream(self, stream, on_spill)
 
+    def drain(self) -> None:
+        """Block until every submitted batch is harvested (routes included).
+
+        The long-lived-service twin of :meth:`finish`: it flushes the
+        in-flight window without touching the backend compile/tune
+        accounting, so the dispatcher stays usable for further
+        ``submit`` calls.
+        """
+        self._drain()
+
     def finish(self) -> int:
-        """Drain all in-flight work; returns the accumulated exact count."""
+        """Drain all in-flight work; returns the accumulated exact count.
+
+        Routed batches are not part of the returned total -- their counts
+        went to their route callbacks.
+        """
         from ..kernels import ops as kops
 
         self._drain()
@@ -485,8 +557,6 @@ class ListDispatcher:
 
         if l < 1:
             raise ValueError("dispatch requires l >= 1 (k >= 3)")
-        if sink is None:
-            raise ValueError("emit mode requires a CliqueSink")
         if isinstance(capacity, str) and capacity not in ("sized",
                                                           "speculative"):
             raise ValueError(f"capacity must be None, 'sized', "
@@ -543,12 +613,41 @@ class ListDispatcher:
 
     @property
     def n_devices(self) -> int:
+        """Number of devices this dispatcher places batches on."""
         return len(self.devices)
 
-    def submit(self, batch: pipeline.TileBatch, device: Optional[int] = None) -> None:
-        """Stage one batch and launch its (first) device pass."""
+    def submit(
+        self,
+        batch: pipeline.TileBatch,
+        device: Optional[int] = None,
+        route=None,
+    ) -> None:
+        """Stage one batch and launch its (first) device pass.
+
+        ``device`` forces a placement (offline scheduling); otherwise
+        online LPT picks the least-loaded device.
+
+        ``route``, when given, replaces the default decode-and-emit for
+        this batch: on the decode worker, ``route(batch, bufs, cnt,
+        ovf)`` receives the raw listing triple sliced back to the batch's
+        un-padded ``B`` rows and must return the number of rows it
+        emitted (use ``listing.decode_batch`` on any row segment to
+        materialize them).  Routed batches never touch ``self.sink``
+        (which may then be None) -- this is the multi-tenant seam:
+        batches fused from several requests run as one device call while
+        each request's rows reach its own sink.  Route callbacks run on
+        the single decode worker in strict FIFO batch order, so the
+        per-request delivery order is as deterministic as the default
+        sink path.
+
+        Thread safety: all ``submit``/``drain``/``finish`` calls must
+        come from one thread; routes run on the decode worker thread.
+        """
         from ..kernels import ops as kops
 
+        if route is None and self.sink is None:
+            raise ValueError("emit mode requires a CliqueSink (or per-"
+                             "batch route callbacks)")
         d = int(np.argmin(self._loads)) if device is None else int(device)
         cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
         self._loads[d] += cost
@@ -566,7 +665,7 @@ class ListDispatcher:
         if self.capacity is None or self.capacity == "sized":
             # async count pass; readiness is probed at promotion time
             hard = self._count_step(A, cand)[0]
-            self._pending.append((d, batch, (A, cand, hard)))
+            self._pending.append((d, batch, (A, cand, hard), route))
         else:
             if self.capacity == "speculative":  # ratchet guess
                 cap = min(self._cap_ratchet.get(batch.T, SPECULATIVE_CAP0),
@@ -577,7 +676,7 @@ class ListDispatcher:
                 A, cand, self.l, capacity=cap,
                 backend=self.backend, interpret=self.interpret,
             )
-            self._inflight.append((d, batch, (A, cand), out))
+            self._inflight.append((d, batch, (A, cand), out, route))
         self._promote(block=False)
         if not self.async_staging:
             self._drain()
@@ -601,7 +700,7 @@ class ListDispatcher:
         from ..kernels import ops as kops
 
         while self._pending:
-            d, batch, (A, cand, hard) = self._pending[0]
+            d, batch, (A, cand, hard), route = self._pending[0]
             if not block and not _is_ready(hard):
                 break
             t0 = time.perf_counter()
@@ -624,16 +723,19 @@ class ListDispatcher:
                 backend=self.backend,
                 interpret=self.interpret,
             )
-            self._inflight.append((d, batch, (A, cand), out))
+            self._inflight.append((d, batch, (A, cand), out, route))
             block = False  # only the head is ever forced
 
     def _decode_job(self, batch: pipeline.TileBatch, acand: tuple,
-                    out: tuple) -> None:
-        """Runs on the decode worker: block for the device triple, decode
-        to global rows (incl. overflow re-lists), feed the sink.  Only
-        this thread ever touches the sink or ``emitted_cliques`` /
-        ``overflowed_tiles``, so FIFO submission == deterministic sink
-        order with no further synchronization."""
+                    out: tuple, route=None) -> None:
+        """Run one decode job on the decode worker.
+
+        Blocks for the device triple, then either decodes to global rows
+        (incl. overflow re-lists) and feeds the sink, or -- for routed
+        batches -- hands the sliced triple to the owning request's
+        ``route``.  Only this thread ever touches the sink or
+        ``emitted_cliques`` / ``overflowed_tiles``, so FIFO submission ==
+        deterministic sink order with no further synchronization."""
         from ..core import listing
         from ..kernels import ops as kops
 
@@ -662,10 +764,13 @@ class ListDispatcher:
                 with self._acct_lock:
                     self.stats.emit_retries += 1
         t1 = time.perf_counter()
-        arr = listing.decode_batch(
-            batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
-        )
-        emitted = self.sink.emit(arr)
+        if route is not None:
+            emitted = int(route(batch, bufs, cnt, ovf))
+        else:
+            arr = listing.decode_batch(
+                batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
+            )
+            emitted = self.sink.emit(arr)
         t2 = time.perf_counter()
         with self._acct_lock:
             self.stats.emitted_cliques += emitted
@@ -688,11 +793,11 @@ class ListDispatcher:
     def _harvest_one(self) -> None:
         if not self._inflight:
             self._promote(block=True)
-        _, batch, acand, out = self._inflight.popleft()
+        _, batch, acand, out, route = self._inflight.popleft()
         # decode + emit run on the decode worker, overlapping device
         # execution AND this thread's submit/promote work
         self._decoding.append(
-            self._decode_ex.submit(self._decode_job, batch, acand, out)
+            self._decode_ex.submit(self._decode_job, batch, acand, out, route)
         )
         # promote any counts that landed meanwhile, then bound the decode
         # backlog (it holds references to device buffers)
@@ -712,21 +817,42 @@ class ListDispatcher:
         Pulls from the (possibly parallel-producer) stream, submitting
         packed batches and routing oversize spill tiles to ``on_spill``
         (which must route their rows through :meth:`emit_rows` so stream
-        order is preserved).  Stops early once the sink reports ``full``.
-        Returns (tiles consumed, max tile width).
+        order is preserved).  The stream may interleave several requests
+        by wrapping items in :class:`Routed` (see :meth:`submit`); routed
+        spills call ``on_spill(tile, route)``.  Stops early once the
+        dispatcher-global sink reports ``full`` (per-request early stop
+        is the routes' business).  Returns (tiles consumed, max tile
+        width).
         """
-        return _consume_stream(self, stream, on_spill,
-                               stop=lambda: self.sink.full)
+        stop = None
+        if self.sink is not None:
+            stop = lambda: self.sink.full  # noqa: E731
+        return _consume_stream(self, stream, on_spill, stop=stop)
+
+    def drain(self) -> None:
+        """Block until every submitted batch is decoded and delivered.
+
+        The long-lived-service twin of :meth:`finish`: flushes pending
+        count passes, in-flight list kernels, and the decode-worker
+        backlog (so all routes/sink writes for prior submits have run),
+        but keeps the decode worker alive for further ``submit`` calls.
+        """
+        self._drain()
 
     def finish(self) -> int:
-        """Drain all in-flight batches; returns rows accepted by the sink."""
+        """Drain all in-flight batches; returns rows accepted by the sink.
+
+        Shuts down the decode worker -- use :meth:`drain` instead to keep
+        the dispatcher serving.  Returns 0 when running sink-less (all
+        batches routed).
+        """
         from ..kernels import ops as kops
 
         self._drain()
         self._decode_ex.shutdown(wait=True)
         self.stats.kernel_compile_s += kops.consume_compile_s()
         kops.drain_tune_events(self.stats)
-        return self.sink.accepted
+        return 0 if self.sink is None else self.sink.accepted
 
     def close(self) -> None:
         """Best-effort teardown for error paths: cancel queued decode

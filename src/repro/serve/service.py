@@ -1,0 +1,286 @@
+"""CliqueService: the long-lived multi-tenant serving front door.
+
+DESIGN.md section 10.  One service owns a graph registry, a bounded
+:class:`~repro.serve.request.RequestQueue`, a
+:class:`~repro.serve.scheduler.BatchScheduler`, and a single scheduler
+thread that drives admission -> pull -> coalesce -> dispatch.  Client
+threads call :meth:`CliqueService.submit` and block on the returned
+:class:`~repro.serve.request.Ticket`; everything device-side is shared:
+plans via the keyed plan cache, executables via the process-wide jit
+caches and pow2 batch bucketing, dispatchers across all requests.
+
+Request lifecycle::
+
+    submit() -> RequestQueue -> admit (plan lookup, open tile stream)
+      -> EDF/LPT chunk pulls -> fuse buffers -> shared Dispatcher /
+      ListDispatcher -> route callbacks -> per-request sequencer ->
+      sink -> Ticket.result()
+
+Overload behavior: a full queue rejects non-blocking submits with
+:class:`~repro.serve.request.ServiceOverloaded` (counted in
+``ServeStats.rejected``); deadlines are accounting only -- admitted work
+always completes exactly, late or not.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional, Union
+
+from ..core.engine_np import Stats
+from ..core.graph import Graph
+from .request import (Request, RequestQueue, ServiceClosed, Ticket)
+from .scheduler import BatchScheduler, ServeStats
+
+
+class CliqueService:
+    """Continuous-batching k-clique serving tier over the JAX engines.
+
+    Typical use::
+
+        svc = CliqueService(devices="all", plan_cache_dir="/tmp/plans")
+        svc.register_graph("social", g)
+        t1 = svc.submit("social", k=5, mode="count")
+        t2 = svc.submit("social", k=5, mode="list", max_out=100,
+                        deadline_s=0.2)
+        print(t1.result().count, t2.result().rows)
+        svc.close()
+
+    Construction knobs: ``devices`` / ``backend`` / ``async_staging`` /
+    ``max_inflight`` mirror the single-query engines; ``chunk_tiles`` is
+    the per-request pull granularity (smaller = finer interleaving,
+    more fusion), ``fuse_rows`` the target fused-batch rows (matches the
+    single-query default batch size so fused batches reuse the same warm
+    executables), ``flush_slack_s`` how close to a deadline a partial
+    buffer is flushed early, ``max_buffer_wait_s`` the age bound on a
+    partial fuse buffer (caps fusion-induced latency when no mergeable
+    chunk shows up), ``max_pending`` the admission-queue bound
+    (backpressure), and ``max_active`` how many requests are pulled from
+    concurrently.
+
+    Thread safety: ``submit`` / ``register_graph`` / ``stats`` are safe
+    from any thread; one internal scheduler thread does all engine work.
+    Results are exact and per-request byte-identical to serial execution
+    (see DESIGN.md section 10 for the invariant and its mechanism).
+    """
+
+    def __init__(
+        self,
+        *,
+        devices=None,
+        backend: Optional[str] = None,
+        max_pending: int = 256,
+        max_active: int = 16,
+        chunk_tiles: int = 64,
+        fuse_rows: int = 256,
+        flush_slack_s: float = 0.02,
+        max_buffer_wait_s: float = 0.01,
+        capacity=None,
+        max_capacity: Optional[int] = None,
+        plan_cache_dir: Optional[str] = None,
+        async_staging: bool = True,
+        max_inflight: int = 2,
+        start: bool = True,
+    ) -> None:
+        self.stats = ServeStats()
+        self.engine_stats = Stats()
+        self._sched = BatchScheduler(
+            devices=devices,
+            backend=backend,
+            chunk_tiles=chunk_tiles,
+            fuse_rows=fuse_rows,
+            flush_slack_s=flush_slack_s,
+            max_buffer_wait_s=max_buffer_wait_s,
+            capacity=capacity,
+            max_capacity=max_capacity,
+            plan_cache_dir=plan_cache_dir,
+            async_staging=async_staging,
+            max_inflight=max_inflight,
+            stats=self.stats,
+            engine_stats=self.engine_stats,
+        )
+        self.max_active = max(1, int(max_active))
+        self._queue = RequestQueue(max_pending)
+        self._graphs: dict = {}
+        self._graphs_lock = threading.Lock()
+        self._resume = threading.Event()
+        self._resume.set()
+        self._closing = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        """Start the scheduler thread (idempotent)."""
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(
+            target=self._run, name="clique-serve", daemon=True)
+        self._thread.start()
+
+    def pause(self) -> None:
+        """Halt admission+scheduling; queued submits accumulate.
+
+        A test/ops hook: pause, submit a burst, :meth:`resume` -- the
+        whole burst is then admitted together, maximizing cross-request
+        fusion determinism in tests.
+        """
+        self._resume.clear()
+
+    def resume(self) -> None:
+        """Resume the scheduler after :meth:`pause`."""
+        self._resume.set()
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain queued+active requests, then shut the tier down.
+
+        Blocks until the scheduler thread exits (up to ``timeout``) and
+        the dispatchers are finished.  Idempotent.
+        """
+        self._closing.set()
+        self._resume.set()
+        self._queue.close()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        self._sched.finish()
+
+    def __enter__(self) -> "CliqueService":
+        """Context-manager entry: the started service itself."""
+        self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Context-manager exit: full drain + shutdown."""
+        self.close()
+
+    # -- client API ---------------------------------------------------------
+
+    def register_graph(self, name: str, g: Graph) -> None:
+        """Register ``g`` under ``name`` for by-name submission.
+
+        Safe from any thread.  Re-registering a name replaces the graph
+        for *future* submissions only.
+        """
+        with self._graphs_lock:
+            self._graphs[name] = g
+
+    def submit(
+        self,
+        graph: Union[str, Graph],
+        k: int,
+        mode: str = "count",
+        *,
+        order: str = "hybrid",
+        use_rule2: bool = True,
+        vertex_filter: Optional[int] = None,
+        max_out: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+        sink=None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> Ticket:
+        """Submit one query; returns immediately with a :class:`Ticket`.
+
+        ``graph`` is a registered name or a ``Graph`` instance.  ``mode``
+        is ``"count"`` or ``"list"``; listing honors ``vertex_filter``
+        (keep cliques containing that vertex), ``max_out`` (truncate
+        after filtering, with early stop), and a custom ``sink``.
+        ``deadline_s`` is a relative latency target used for EDF
+        scheduling and miss accounting -- never cancellation.
+
+        Backpressure: with ``block=False`` a full admission queue raises
+        :class:`~repro.serve.request.ServiceOverloaded` instead of
+        waiting (``timeout`` bounds the blocking wait).  Raises
+        :class:`~repro.serve.request.ServiceClosed` after :meth:`close`.
+
+        Thread-safe; callable from any number of client threads.
+        """
+        if self._closing.is_set():
+            raise ServiceClosed("service is closed")
+        if isinstance(graph, str):
+            with self._graphs_lock:
+                g = self._graphs.get(graph)
+            if g is None:
+                raise KeyError(f"unknown graph {graph!r}; register_graph "
+                               f"first")
+        else:
+            g = graph
+        req = Request(
+            g, k, mode, order=order, use_rule2=use_rule2,
+            vertex_filter=vertex_filter, max_out=max_out,
+            deadline_s=deadline_s, sink=sink,
+        )
+        req._on_done = self._record_done
+        req.mark_submitted()
+        if mode == "count" and k < 3:
+            # closed forms; answered at admission, never scheduled
+            with self._sched.stats_lock:
+                self.stats.admitted += 1
+            req.deliver(req.next_seq(), g.n if k == 1 else g.m)
+            req.finish_feeding()
+            return Ticket(req)
+        try:
+            self._queue.put(req, block=block, timeout=timeout)
+        except Exception:
+            with self._sched.stats_lock:
+                self.stats.rejected += 1
+            raise
+        with self._sched.stats_lock:
+            self.stats.admitted += 1
+        return Ticket(req)
+
+    # -- internals ----------------------------------------------------------
+
+    def _record_done(self, result) -> None:
+        with self._sched.stats_lock:
+            self.stats.completed += 1
+            if result.deadline_missed:
+                self.stats.deadline_missed += 1
+
+    def _admit_safe(self, req: Request) -> None:
+        try:
+            self._sched.admit(req)
+        except Exception as exc:  # bad request: resolve it, keep serving
+            req.fail(exc)
+
+    def _run(self) -> None:
+        sched, queue = self._sched, self._queue
+        try:
+            while True:
+                if not self._resume.is_set():
+                    if self._closing.is_set():
+                        self._resume.set()
+                        continue
+                    self._resume.wait(0.05)
+                    continue
+                while sched.n_active < self.max_active:
+                    req = queue.get_nowait()
+                    if req is None:
+                        break
+                    self._admit_safe(req)
+                if sched.step():
+                    continue
+                # no pullable stream: push pending + in-flight work out so
+                # every delivered request resolves before we block
+                sched.flush_all()
+                sched.drain()
+                if self._closing.is_set() and len(queue) == 0 \
+                        and sched.n_active == 0:
+                    break
+                req = queue.get(timeout=0.05)
+                if req is not None:
+                    self._admit_safe(req)
+        except BaseException as exc:  # scheduler died: fail all waiters
+            self._error = exc
+            sched.fail_active(exc)
+            while True:
+                req = queue.get_nowait()
+                if req is None:
+                    break
+                req.fail(exc)
+            raise

@@ -174,9 +174,12 @@ def test_resolve_backend_precedence(monkeypatch):
         ops.resolve_backend("bogus")
 
 
-def test_autotune_picks_and_caches():
+def test_autotune_picks_and_caches(monkeypatch):
     from repro import tune
 
+    # layers 2-4 of the resolution ladder: a concrete REPRO_BACKEND (the
+    # CI matrix exports lax) legitimately short-circuits before the cache
+    monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
     ops.clear_autotune_cache()
     choice = ops.autotune_backend("count", 4, 32)
     assert choice in ("lax", "pallas")
@@ -195,11 +198,12 @@ def test_autotune_picks_and_caches():
     np.testing.assert_array_equal(got, exp)
 
 
-def test_autotune_key_separates_capacity_buckets():
+def test_autotune_key_separates_capacity_buckets(monkeypatch):
     """Regression: the autotune cache key must fold in (device kind,
     capacity bucket) -- a winner measured for a tiny emit buffer must not
     answer for a huge one (the buffer rides the DFS carry), and listing
     must never share entries with counting."""
+    monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
     ops.clear_autotune_cache()
     ops.autotune_backend("list", 2, 32, capacity=64)
     ops.autotune_backend("list", 2, 32, capacity=4096)

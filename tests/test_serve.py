@@ -1,0 +1,424 @@
+"""Serving tier: single-request parity vs the plain engines, concurrent
+byte-identical determinism, deadline accounting, backpressure, coalescing
+stats, and the routed multi-request dispatcher seam.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to exercise
+the tier over multi-device dispatch (the CI matrix does both 1 and 4).
+"""
+
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import engine_jax, listing, pipeline
+from repro.core import tiles as tiles_mod
+from repro.core.engine_np import Stats
+from repro.data import rmat_graph
+from repro.runtime.dispatch import Dispatcher, ListDispatcher, Routed
+from repro.serve import (
+    CliqueService,
+    ServiceClosed,
+    ServiceOverloaded,
+    apply_vertex_filter,
+    edf_pick,
+    fuse_chunks,
+)
+
+
+def make_graphs():
+    rng = np.random.default_rng(77)
+    return {
+        "a": random_graph(rng, n_lo=24, n_hi=25, p_lo=0.3, p_hi=0.3),
+        "b": random_graph(rng, n_lo=30, n_hi=31, p_lo=0.25, p_hi=0.25),
+        "c": rmat_graph(5, 8, seed=7),
+    }
+
+
+GRAPHS = make_graphs()
+
+
+def ref_count(g, k):
+    return engine_jax.count(g, k).count
+
+
+def ref_rows(g, k):
+    sink = listing.ArraySink(k)
+    listing.stream_cliques(g, k, sink)
+    return sink.result()
+
+
+def service(**kw):
+    svc = CliqueService(**kw)
+    for name, g in GRAPHS.items():
+        svc.register_graph(name, g)
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# policy units
+# ---------------------------------------------------------------------------
+
+
+def test_edf_pick_empty():
+    assert edf_pick([]) is None
+
+
+def test_edf_pick_earliest_deadline_wins():
+    assert edf_pick([(5.0, 10, 0), (2.0, 1, 1), (9.0, 99, 2)]) == 1
+
+
+def test_edf_pick_no_deadline_sorts_last():
+    assert edf_pick([(None, 1000, 0), (50.0, 1, 1)]) == 1
+
+
+def test_edf_pick_lpt_fallback_among_equal_deadlines():
+    # no deadlines anywhere: the largest remaining work is picked (LPT)
+    assert edf_pick([(None, 10, 0), (None, 30, 1), (None, 20, 2)]) == 1
+
+
+def test_edf_pick_arrival_tiebreak():
+    assert edf_pick([(None, 10, 1), (None, 10, 0)]) == 1  # idx 0 wins
+
+
+def test_fuse_chunks_concatenates_and_segments():
+    g = GRAPHS["c"]
+    plan = pipeline.cached_plan(g, "hybrid")
+    batches = [b for b in pipeline.stream_batches(plan, 4, batch_size=4)
+               if not isinstance(b, tiles_mod.Tile)]
+    by_t = {}
+    for b in batches:
+        by_t.setdefault(b.T, []).append(b)
+    same_t = next(bs for bs in by_t.values() if len(bs) >= 2)[:2]
+    chunks = [("r0", 0, same_t[0]), ("r1", 3, same_t[1])]
+    fused, segments = fuse_chunks(chunks)
+    assert fused.B == same_t[0].B + same_t[1].B
+    assert [(r, s, a, b) for r, s, a, b, _ in segments] == [
+        ("r0", 0, 0, same_t[0].B),
+        ("r1", 3, same_t[0].B, fused.B),
+    ]
+    np.testing.assert_array_equal(
+        fused.A, np.concatenate([same_t[0].A, same_t[1].A]))
+    np.testing.assert_array_equal(
+        fused.verts, np.concatenate([same_t[0].verts, same_t[1].verts]))
+
+
+def test_apply_vertex_filter():
+    rows = np.array([[0, 1, 2], [1, 2, 3], [4, 5, 6]])
+    np.testing.assert_array_equal(
+        apply_vertex_filter(rows, 1), rows[:2])
+    assert apply_vertex_filter(rows[:0], 1).shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# single-request parity vs the plain engines
+# ---------------------------------------------------------------------------
+
+
+def test_single_count_matches_engine():
+    with service() as svc:
+        for name, g in GRAPHS.items():
+            for k in (3, 4, 5):
+                assert svc.submit(name, k).result(120).count \
+                    == ref_count(g, k)
+
+
+def test_single_list_matches_stream_cliques_exactly():
+    with service() as svc:
+        for name, g in GRAPHS.items():
+            for k in (3, 4):
+                got = svc.submit(name, k, "list").result(120).rows
+                np.testing.assert_array_equal(got, ref_rows(g, k))
+
+
+def test_count_closed_forms_k1_k2():
+    with service() as svc:
+        g = GRAPHS["a"]
+        assert svc.submit("a", 1).result(30).count == g.n
+        assert svc.submit("a", 2).result(30).count == g.m
+
+
+def test_vertex_filter_and_max_out_semantics():
+    with service() as svc:
+        g = GRAPHS["b"]
+        ref = ref_rows(g, 4)
+        v = int(ref[0, 0])
+        want = apply_vertex_filter(ref, v)
+        got = svc.submit("b", 4, "list", vertex_filter=v).result(120)
+        np.testing.assert_array_equal(got.rows, want)
+        # max_out truncates AFTER filtering, in stream order
+        got2 = svc.submit("b", 4, "list", vertex_filter=v,
+                          max_out=3).result(120)
+        np.testing.assert_array_equal(got2.rows, want[:3])
+
+
+def test_external_sink_delivery():
+    with service() as svc:
+        g = GRAPHS["a"]
+        sink = listing.ArraySink(4)
+        res = svc.submit("a", 4, "list", sink=sink).result(120)
+        assert res.rows is None  # caller owns the sink
+        np.testing.assert_array_equal(sink.result(), ref_rows(g, 4))
+        assert res.emitted == ref_rows(g, 4).shape[0]
+
+
+def test_invalid_requests():
+    with service() as svc:
+        with pytest.raises(KeyError):
+            svc.submit("nope", 4)
+        with pytest.raises(ValueError):
+            svc.submit("a", 2, "list")  # listing needs k >= 3
+        with pytest.raises(ValueError):
+            svc.submit("a", 4, "explode")
+        with pytest.raises(ValueError):
+            svc.submit("a", 4, deadline_s=0.0)
+
+
+def test_submit_after_close_raises():
+    svc = service()
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit("a", 4)
+
+
+# ---------------------------------------------------------------------------
+# concurrency: determinism, coalescing, deadlines, backpressure
+# ---------------------------------------------------------------------------
+
+SETTINGS = [
+    dict(chunk_tiles=16, fuse_rows=64, async_staging=False),
+    dict(chunk_tiles=32, fuse_rows=128, async_staging=True),
+    dict(chunk_tiles=64, fuse_rows=256, async_staging=True),
+]
+
+
+@pytest.mark.parametrize("cfg", SETTINGS)
+def test_concurrent_burst_byte_identical_to_serial(cfg):
+    specs = [(n, k, m) for n in ("a", "b") for k in (4, 5)
+             for m in ("count", "list")]
+    refs = {}
+    for n, k, m in specs:
+        g = GRAPHS[n]
+        refs[(n, k, m)] = ref_count(g, k) if m == "count" else ref_rows(g, k)
+    with service(**cfg) as svc:
+        svc.pause()  # admit the whole burst together: maximal interleaving
+        tickets = [(s, svc.submit(s[0], s[1], s[2])) for s in specs * 2]
+        svc.resume()
+        for (n, k, m), t in tickets:
+            res = t.result(300)
+            if m == "count":
+                assert res.count == refs[(n, k, m)]
+            else:
+                np.testing.assert_array_equal(res.rows, refs[(n, k, m)])
+
+
+def test_cross_request_coalescing_happens():
+    with service(chunk_tiles=16, fuse_rows=128) as svc:
+        svc.pause()
+        tickets = [svc.submit("b", 4, "list") for _ in range(6)]
+        svc.resume()
+        want = ref_rows(GRAPHS["b"], 4)
+        for t in tickets:
+            np.testing.assert_array_equal(t.result(300).rows, want)
+        assert svc.stats.cross_request_batches > 0
+        assert svc.stats.fused_chunks > svc.stats.fused_batches
+
+
+def test_deadline_miss_accounting():
+    with service() as svc:
+        ok = svc.submit("a", 4, deadline_s=120.0).result(120)
+        assert ok.deadline_missed is False
+        # an impossible deadline: the result is still exact, only flagged
+        late = svc.submit("a", 5, deadline_s=1e-4).result(120)
+        assert late.deadline_missed is True
+        assert late.count == ref_count(GRAPHS["a"], 5)
+        assert svc.stats.deadline_missed == 1
+        assert svc.stats.completed >= 2
+
+
+def test_overload_backpressure_sheds_then_recovers():
+    svc = service(max_pending=2)
+    try:
+        svc.pause()  # stop admission so the queue actually fills
+        kept = [svc.submit("a", 4), svc.submit("a", 5)]
+        with pytest.raises(ServiceOverloaded):
+            svc.submit("b", 4, block=False)
+        assert svc.stats.rejected == 1
+        svc.resume()  # the queued burst still completes exactly
+        assert kept[0].result(120).count == ref_count(GRAPHS["a"], 4)
+        assert kept[1].result(120).count == ref_count(GRAPHS["a"], 5)
+    finally:
+        svc.close()
+
+
+def test_many_clients_many_threads():
+    errors = []
+    with service() as svc:
+        refs = {k: ref_count(GRAPHS["c"], k) for k in (3, 4, 5)}
+
+        def client(i):
+            try:
+                for k in (3, 4, 5):
+                    assert svc.submit("c", k).result(120).count == refs[k]
+            except BaseException as exc:  # surfaced after join
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errors
+
+
+# ---------------------------------------------------------------------------
+# the routed dispatcher seam (multi-request streams through consume)
+# ---------------------------------------------------------------------------
+
+
+def _routed_stream(plan_k_pairs, *, interleave=True):
+    """Interleave each request's packed-batch stream, wrapped in Routed."""
+    streams = []
+    for rid, (g, k, route) in enumerate(plan_k_pairs):
+        plan = pipeline.cached_plan(g, "hybrid")
+        items = list(pipeline.stream_batches(plan, k, batch_size=16))
+        streams.append([Routed(it, route) for it in items])
+    if not interleave:
+        for s in streams:
+            yield from s
+        return
+    i = 0
+    while any(streams):
+        s = streams[i % len(streams)]
+        if s:
+            yield s.pop(0)
+        i += 1
+
+
+def test_dispatcher_consume_interleaved_routed_counts():
+    k = 4
+    l = k - 2
+    totals = {}
+
+    def mk_route(rid):
+        def route(hard, nv, t, f):
+            totals[rid] = totals.get(rid, 0) + engine_jax.combine_counts(
+                hard, nv, t, f, l, True)
+        return route
+
+    def on_spill(tile, route=None):
+        c = engine_jax.count_spilled(tile, "hybrid", l, Stats(), 3, True)
+        if route is not None:
+            # spilled work still belongs to its request
+            totals_key = [rid for rid, r in routes.items() if r is route][0]
+            totals[totals_key] = totals.get(totals_key, 0) + c
+
+    routes = {0: mk_route(0), 1: mk_route(1)}
+    disp = Dispatcher(l, None, et=True)
+    stream = _routed_stream([(GRAPHS["a"], k, routes[0]),
+                             (GRAPHS["b"], k, routes[1])])
+    disp.consume(stream, on_spill=on_spill)
+    disp.finish()
+    assert totals[0] == ref_count(GRAPHS["a"], k)
+    assert totals[1] == ref_count(GRAPHS["b"], k)
+
+
+def test_list_dispatcher_consume_interleaved_routed_rows():
+    k = 4
+    l = k - 2
+    rows = {0: [], 1: []}
+
+    def mk_route(rid):
+        def route(batch, bufs, cnt, ovf):
+            out = listing.decode_batch(batch, bufs, cnt, ovf, l, Stats(),
+                                       et_t=3)
+            rows[rid].append(out)
+            return out.shape[0]
+        return route
+
+    disp = ListDispatcher(l, None, sink=None, et_t=3)
+    stream = _routed_stream([(GRAPHS["a"], k, mk_route(0)),
+                             (GRAPHS["b"], k, mk_route(1))])
+    disp.consume(stream)
+    disp.finish()
+    for rid, g in ((0, GRAPHS["a"]), (1, GRAPHS["b"])):
+        got = np.concatenate(rows[rid]) if rows[rid] else np.empty((0, k))
+        np.testing.assert_array_equal(got, ref_rows(g, k))
+
+
+def test_dispatcher_unrouted_stream_still_totals():
+    # bare TileBatch items keep the classic single-request behavior
+    k, l = 4, 2
+    g = GRAPHS["a"]
+    plan = pipeline.cached_plan(g, "hybrid")
+    disp = Dispatcher(l, None, et=True)
+    spilled = []
+    disp.consume(pipeline.stream_batches(plan, k, batch_size=32),
+                 on_spill=lambda t: spilled.append(t))
+    assert disp.finish() + sum(
+        engine_jax.count_spilled(t, "hybrid", l, Stats(), 3, True)
+        for t in spilled) == ref_count(g, k)
+
+
+# ---------------------------------------------------------------------------
+# loadgen API
+# ---------------------------------------------------------------------------
+
+
+def load_loadgen():
+    import importlib.util
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "loadgen.py")
+    spec = importlib.util.spec_from_file_location("loadgen", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_loadgen_workload_is_seeded_and_mixed():
+    lg = load_loadgen()
+    w1 = lg.build_workload(["a", "b"], [4, 5], 24, 0.5, 0.5, 10, 100.0, 3)
+    w2 = lg.build_workload(["a", "b"], [4, 5], 24, 0.5, 0.5, 10, 100.0, 3)
+    assert w1 == w2  # same seed, same multiset
+    assert {s["graph"] for s in w1} == {"a", "b"}
+    assert {s["mode"] for s in w1} == {"count", "list"}
+    assert all(s["deadline_s"] == 0.1 for s in w1)
+    w3 = lg.build_workload(["a"], [4], 8, 0.5, 0.5, 10, 100.0, 4)
+    assert w3 != w1[:8]
+
+
+def test_loadgen_summarize_fields():
+    lg = load_loadgen()
+    rec = lg.summarize("serve", [0.010, 0.020, 0.030, 0.040], 1, 0, 2, 2.0)
+    assert rec["completed"] == 4 and rec["rejected"] == 2
+    assert rec["requests"] == 6
+    assert rec["goodput_rps"] == pytest.approx(1.5)  # (4 - 1 missed) / 2s
+    assert rec["throughput_rps"] == pytest.approx(2.0)
+    assert rec["miss_rate"] == pytest.approx(0.25)
+    assert rec["p50_ms"] == pytest.approx(25.0)
+    assert sum(rec["latency_hist"]) == 4
+
+
+def test_loadgen_end_to_end_serve_smoke(tmp_path):
+    lg = load_loadgen()
+    out = tmp_path / "lg.json"
+    rc = lg.main([
+        "--mode", "serve", "--clients", "2", "--requests-per-client", "2",
+        "--graphs", "er:16,0.5", "--ks", "4", "--list-frac", "0.5",
+        "--warmup", "0", "--json", str(out),
+    ])
+    assert rc == 0
+    import json
+
+    payload = json.loads(out.read_text())
+    assert len(payload["records"]) == 1
+    rec = payload["records"][0]
+    assert rec["mismatches"] == 0 and rec["completed"] == 4
+    assert rec["kind"] == "serve_loadgen"
+    assert rec["config"]["clients"] == 2
+    assert "serve_stats" in rec
