@@ -252,6 +252,30 @@ def _submit_serve(svc, spec, block=True):
 HIST_EDGES_MS = [2.0 ** e for e in range(-1, 15)]  # 0.5ms .. 16s
 
 
+def stage_breakdown(stage_dicts):
+    """Aggregate per-request ``stage_s`` dicts into per-stage summaries.
+
+    Returns ``{stage: {mean_ms, p99_ms, total_s, requests}}`` over the
+    requests that recorded that stage (queue-wait vs fuse-wait vs device
+    vs reorder; device seconds overlap across fused requests, so totals
+    are attribution, not wall time).
+    """
+    per_stage = {}
+    for d in stage_dicts:
+        for stage, dt in (d or {}).items():
+            per_stage.setdefault(stage, []).append(dt)
+    out = {}
+    for stage, vals in sorted(per_stage.items()):
+        ms = np.asarray(vals) * 1e3
+        out[stage] = {
+            "mean_ms": float(ms.mean()),
+            "p99_ms": float(np.percentile(ms, 99)),
+            "total_s": float(ms.sum() / 1e3),
+            "requests": int(ms.size),
+        }
+    return out
+
+
 def summarize(name, latencies_s, missed, mismatches, rejected, wall_s):
     """Fold one run's raw measurements into a BENCH record body."""
     lat_ms = np.asarray(sorted(latencies_s)) * 1e3
@@ -292,6 +316,7 @@ def run_closed(submit, specs, clients, oracle, timeout=600.0):
     per_client = [specs[c::clients] for c in range(clients)]
     lock = threading.Lock()
     latencies, missed, mismatches = [], [0], [0]
+    stages = []
     errors = []
 
     def client(idx):
@@ -302,6 +327,7 @@ def run_closed(submit, specs, clients, oracle, timeout=600.0):
                        and not hasattr(ticket, "get") else ticket.get(timeout))
                 with lock:
                     latencies.append(res.latency_s)
+                    stages.append(dict(getattr(res, "stage_s", None) or {}))
                     if res.deadline_missed:
                         missed[0] += 1
                     if not _check(spec, res, oracle):
@@ -319,14 +345,14 @@ def run_closed(submit, specs, clients, oracle, timeout=600.0):
     wall = time.monotonic() - t0
     if errors:
         raise errors[0]
-    return latencies, missed[0], mismatches[0], wall
+    return latencies, missed[0], mismatches[0], wall, stages
 
 
 def run_open(submit, specs, rate, oracle, seed, timeout=600.0):
     """Open-loop drive: Poisson arrivals at ``rate``/s, non-blocking admit.
 
     Overloaded submissions are shed (rejected); returns
-    (latencies, missed, mismatches, rejected, wall_s).
+    (latencies, missed, mismatches, rejected, wall_s, stage_dicts).
     """
     from repro.serve import ServiceOverloaded
 
@@ -346,16 +372,18 @@ def run_open(submit, specs, rate, oracle, seed, timeout=600.0):
         except ServiceOverloaded:
             rejected += 1
     latencies, missed, mismatches = [], 0, 0
+    stages = []
     for spec, ticket in inflight:
         res = (ticket.result(timeout) if hasattr(ticket, "result")
                and not hasattr(ticket, "get") else ticket.get(timeout))
         latencies.append(res.latency_s)
+        stages.append(dict(getattr(res, "stage_s", None) or {}))
         if res.deadline_missed:
             missed += 1
         if not _check(spec, res, oracle):
             mismatches += 1
     wall = time.monotonic() - t0
-    return latencies, missed, mismatches, rejected, wall
+    return latencies, missed, mismatches, rejected, wall, stages
 
 
 def main(argv=None):
@@ -399,6 +427,19 @@ def main(argv=None):
     ap.add_argument("--plan-cache", default=None)
     ap.add_argument("--json", dest="out_json", default=None)
     ap.add_argument("--append", action="store_true")
+    ap.add_argument("--log-level", default="warning",
+                    help="repro.* logger verbosity (obs/logging)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto span trace of the whole "
+                         "run (warmup included) with per-request async "
+                         "tracks keyed by ticket id")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="expose the serve-mode service's Prometheus "
+                         "/metrics on 127.0.0.1:PORT (0 = ephemeral)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="scrape the service's /metrics once after the "
+                         "measured epoch and write the exposition text to "
+                         "PATH (implies an ephemeral --metrics-port)")
     ap.add_argument("--assert-goodput-x", type=float, default=None,
                     help="require serve goodput >= X * serial goodput at "
                          "p99 <= --p99-tol * serial p99 (needs --mode both)")
@@ -410,7 +451,16 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.virtual_devices}")
 
     from repro.launch.clique import load_graph, parse_devices
+    from repro.obs import trace
+    from repro.obs.export import scrape
+    from repro.obs.logging import setup_logging
     from repro.serve import CliqueService
+
+    setup_logging(args.log_level)
+    if args.trace_out:
+        trace.configure(enabled=True)
+    if args.metrics_out is not None and args.metrics_port is None:
+        args.metrics_port = 0  # snapshot needs a live endpoint to scrape
 
     # graph specs may contain commas (er:300,0.08): a comma only starts a
     # new spec when the next fragment has its own "name:" prefix
@@ -453,11 +503,26 @@ def main(argv=None):
         svc = CliqueService(
             devices=devices, backend=args.backend,
             chunk_tiles=args.chunk_tiles, fuse_rows=args.fuse_rows,
-            max_pending=args.max_pending, plan_cache_dir=args.plan_cache)
+            max_pending=args.max_pending, plan_cache_dir=args.plan_cache,
+            metrics_port=args.metrics_port)
+        if svc.metrics_address:
+            print(f"# metrics: {svc.metrics_address}/metrics", flush=True)
         for name, g in graph_objs.items():
             svc.register_graph(name, g)
         return (lambda spec, block=True: _submit_serve(svc, spec, block),
                 svc.close, svc)
+
+    def snapshot_metrics(svc):
+        # one scrape while the service (and its collector) is still alive
+        if svc is None or args.metrics_out is None:
+            return
+        if svc.metrics_address is None:
+            return
+        text = scrape(svc.metrics_address)
+        with open(args.metrics_out, "w") as f:
+            f.write(text)
+        print(f"# wrote {args.metrics_out} "
+              f"({len(text.splitlines())} exposition lines)", flush=True)
 
     def serial_factory():
         ex = SerialExecutor(graph_objs, devices, args.backend,
@@ -504,23 +569,32 @@ def main(argv=None):
             # measured epoch is the steady serving state
             for _ in range(args.warmup):
                 run_closed(submit, workload, args.clients, oracle)
-            lat, missed, mism, wall = run_closed(
+            lat, missed, mism, wall, stages = run_closed(
                 submit, workload, args.clients, oracle)
+            snapshot_metrics(svc)
             close()
             rec = summarize(mode, lat, missed, mism, 0, wall)
-            rec.update(loop="closed", clients=args.clients)
+            rec.update(loop="closed", clients=args.clients,
+                       stage_breakdown=stage_breakdown(stages))
             failures += finish_record(rec, mode, svc)
         else:
             for rate in (float(r) for r in args.rates.split(",")):
                 submit, close, svc = factory()
                 for _ in range(args.warmup):
                     run_closed(submit, workload, max(4, args.clients), oracle)
-                lat, missed, mism, rejected, wall = run_open(
+                lat, missed, mism, rejected, wall, stages = run_open(
                     submit, workload, rate, oracle, args.seed)
+                snapshot_metrics(svc)
                 close()
                 rec = summarize(mode, lat, missed, mism, rejected, wall)
-                rec.update(loop="open", rate=rate)
+                rec.update(loop="open", rate=rate,
+                           stage_breakdown=stage_breakdown(stages))
                 failures += finish_record(rec, mode, svc)
+
+    if args.trace_out:
+        trace.export(args.trace_out)
+        print(f"# wrote {args.trace_out} ({len(trace.events())} trace "
+              f"events, {trace.dropped()} dropped)", flush=True)
 
     if args.out_json:
         payload = {"graph": "+".join(graphs), "ks": ks,

@@ -11,6 +11,15 @@ work -- so the dry-run projections and the live kernel benchmarks share
 one table format.
 
     PYTHONPATH=src python -m benchmarks.roofline_report --bench BENCH_pr6.json
+
+With ``--trace trace.json`` (a ``--trace-out`` artifact from
+``launch.clique`` or ``benchmarks.loadgen``) the report renders a
+per-kernel-signature roofline straight from the span trace: the
+dispatcher's device spans carry ``sig``/``flops``/``bytes`` args, so one
+exported trace is enough to attribute achieved FLOP/s per kernel shape
+(``repro.obs.profile.aggregate_device_spans``).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report --trace trace.json
 """
 from __future__ import annotations
 
@@ -18,6 +27,9 @@ import argparse
 import glob
 import json
 import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def load(mesh: str, out="artifacts/dryrun"):
@@ -108,6 +120,43 @@ def bench_table(bench_path: str) -> str:
     return "\n".join(rows)
 
 
+def trace_table(trace_path: str) -> str:
+    """Per-kernel-signature roofline from an exported span trace.
+
+    Every dispatcher device span carries the kernel signature plus the
+    staged flops/bytes in its args; ``aggregate_device_spans`` folds the
+    trace into the same rows as the live ``kernel_records()`` table, so
+    compile time, device seconds, and achieved FLOP/s are attributed per
+    kernel shape from the trace file alone -- no rerun needed.
+    """
+    from repro.launch.roofline import (HBM_BW, PEAK_FLOPS, roofline_terms)
+    from repro.obs.profile import aggregate_device_spans
+
+    with open(trace_path) as f:
+        doc = json.load(f)
+    rows = [
+        "| kernel signature | calls | compile_s | device_s | GFLOP | MB | "
+        "achieved GFLOP/s | achieved GB/s | TPU bound | dominant |",
+        "|" + "---|" * 10,
+    ]
+    recs = aggregate_device_spans(doc)
+    for r in recs:
+        secs = r["execute_s"]
+        flops, nbytes = r["flops"], r["bytes"]
+        if not secs:
+            continue
+        t = roofline_terms(flops, nbytes, 0.0)
+        rows.append(
+            f"| {r['sig']} | {r['calls']} | {fmt_s(r['compile_s'])} "
+            f"| {fmt_s(secs)} | {flops / 1e9:.2f} | {nbytes / 1e6:.2f} "
+            f"| {flops / secs / 1e9:.2f} | {nbytes / secs / 1e9:.2f} "
+            f"| {fmt_s(t['bound_s'])} | {t['dominant'][:-2]} |")
+    rows.append(f"\nmodel: {PEAK_FLOPS / 1e12:.0f} TFLOP/s, "
+                f"{HBM_BW / 1e9:.0f} GB/s HBM; {len(recs)} signatures in "
+                f"{trace_path}")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
@@ -116,7 +165,14 @@ def main():
                     help="render the measured-kernel roofline from a "
                          "benchmarks.run --json artifact instead of the "
                          "dry-run table")
+    ap.add_argument("--trace", default=None, metavar="JSON",
+                    help="render a per-kernel-signature roofline from a "
+                         "--trace-out span trace (launch.clique or "
+                         "benchmarks.loadgen artifact)")
     args = ap.parse_args()
+    if args.trace:
+        print(trace_table(args.trace))
+        return
     if args.bench:
         print(bench_table(args.bench))
         return

@@ -28,6 +28,8 @@ import time
 import numpy as np
 
 from repro.data import powerlaw_graph, rmat_graph
+from repro.obs import trace
+from repro.obs.logging import LEVELS, setup_logging
 from repro.serve import CliqueService
 
 
@@ -62,7 +64,18 @@ def main():
                          "a restarted service reuses tuned backend/geometry "
                          "records and XLA's persistent compilation cache "
                          "instead of re-measuring and re-compiling")
+    ap.add_argument("--log-level", default="warning", choices=list(LEVELS),
+                    help="repro.* logger verbosity (obs/logging)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto span trace of the whole "
+                         "serving run (per-request async tracks included)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus /metrics from the service on "
+                         "127.0.0.1:PORT (0 = ephemeral port)")
     args = ap.parse_args()
+    setup_logging(args.log_level)
+    if args.trace_out:
+        trace.configure(enabled=True)
     if args.tune_cache:
         from repro import tune
 
@@ -70,7 +83,10 @@ def main():
 
     svc = CliqueService(backend=None if args.backend == "auto"
                         else args.backend,
-                        plan_cache_dir=args.plan_cache)
+                        plan_cache_dir=args.plan_cache,
+                        metrics_port=args.metrics_port)
+    if svc.metrics_address:
+        print(f"metrics: {svc.metrics_address}/metrics")
     graphs = {}
     for i in range(args.snapshots):
         name, g = snapshot(i)
@@ -117,6 +133,10 @@ def main():
           f"{s.fused_chunks} chunks fused, {s.spill_tiles} host spills), "
           f"{s.deadline_missed} deadline misses")
     svc.close()
+    if args.trace_out:
+        trace.export(args.trace_out)
+        print(f"trace: wrote {args.trace_out} "
+              f"({len(trace.events())} events)")
 
 
 if __name__ == "__main__":

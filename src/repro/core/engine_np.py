@@ -90,6 +90,87 @@ class Stats:
     # with device_flops
     device_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
 
+    # How each field combines across Stats objects (Stats.merge) and how it
+    # publishes to the metrics registry (repro.obs.metrics.observe_stats):
+    #   sum  -- additive accumulator (counter)
+    #   max  -- peak/high-water value
+    #   or   -- sticky boolean flag
+    #   dict -- per-key additive map (device ordinal -> amount)
+    #   list -- concatenated observations (histogram)
+    #   mean -- occupancy-style ratio; merge keeps the max as the
+    #           conservative summary (per-run views stay exact)
+    #   info -- identity metadata, kept from self (or taken from other
+    #           when self is unset)
+    _MERGE_KINDS = {
+        "branches": "sum",
+        "et_hits": "sum",
+        "pruned_size": "sum",
+        "pruned_color": "sum",
+        "peak_graph": "max",
+        "spilled_tiles": "sum",
+        "spill_sizes": "list",
+        "device_tiles": "dict",
+        "device_flops": "dict",
+        "device_bytes": "dict",
+        "staging_overlap_s": "sum",
+        "emitted_cliques": "sum",
+        "overflowed_tiles": "sum",
+        "sink_bytes": "sum",
+        "emit_retries": "sum",
+        "backend": "info",
+        "kernel_compile_s": "sum",
+        "pack_workers": "max",
+        "frontend_s": "sum",
+        "pack_queue_occupancy": "mean",
+        "pack_queue_peak": "max",
+        "plan_cache_hit": "or",
+        "plan_build_s": "sum",
+        "tune_s": "sum",
+        "tune_cache_hit": "or",
+    }
+    # Metric-publication view of the same table (repro.obs reads this).
+    _METRIC_KINDS = dict(
+        _MERGE_KINDS,
+        pack_workers="max",
+        pack_queue_occupancy="max",
+        plan_cache_hit="flag",
+        tune_cache_hit="flag",
+    )
+
+    def merge(self, other: "Stats") -> "Stats":
+        """Fold ``other`` into ``self`` (in place) and return ``self``.
+
+        This is the single merge path for combining per-device /
+        per-request ``Stats`` into an aggregate (``runtime.dispatch``,
+        ``serve.service``, ``benchmarks``).  Every dataclass field must be
+        classified in ``_MERGE_KINDS`` -- adding a field without
+        classifying it raises here (and is caught by the tier-1 suite).
+        """
+        for f in dataclasses.fields(self):
+            kind = self._MERGE_KINDS.get(f.name)
+            if kind is None:
+                raise TypeError(
+                    f"Stats.{f.name} has no merge rule; add it to "
+                    "Stats._MERGE_KINDS"
+                )
+            mine = getattr(self, f.name)
+            theirs = getattr(other, f.name)
+            if kind == "sum":
+                setattr(self, f.name, mine + theirs)
+            elif kind in ("max", "mean"):
+                setattr(self, f.name, max(mine, theirs))
+            elif kind == "or":
+                setattr(self, f.name, bool(mine or theirs))
+            elif kind == "dict":
+                for k, v in theirs.items():
+                    mine[k] = mine.get(k, 0) + v
+            elif kind == "list":
+                mine.extend(theirs)
+            elif kind == "info":
+                if not mine and theirs:
+                    setattr(self, f.name, theirs)
+        return self
+
 
 def _count_edges(rows: Sequence[int], cand: int) -> int:
     s = 0

@@ -39,6 +39,7 @@ from .graph import ragged_expand
 from . import pipeline
 from . import tiles as tiles_mod
 from ..kernels import ops as kops
+from ..obs import trace
 from ..tune import search as tune_search
 
 #: default cap on the per-tile emit buffer (rows); tiles whose true count
@@ -196,14 +197,15 @@ def list_spilled(
     """List one oversize tile on the host (mirrors ``count_spilled``)."""
     stats.spilled_tiles += 1
     stats.spill_sizes.append(tile.s)
-    return _list_tile_host(
-        tile.rows,
-        tile.s,
-        np.asarray(tile.anchor, dtype=np.int64),
-        tile.verts,
-        l,
-        et_t=et_t,
-    )
+    with trace.span("spill/list", s=tile.s):
+        return _list_tile_host(
+            tile.rows,
+            tile.s,
+            np.asarray(tile.anchor, dtype=np.int64),
+            tile.verts,
+            l,
+            et_t=et_t,
+        )
 
 
 def decode_batch(
@@ -236,9 +238,10 @@ def decode_batch(
         stats.overflowed_tiles += 1
         s = int(batch.sizes[b])
         rows = _rows_from_packed(batch.A[b], s)
-        parts[b] = _list_tile_host(
-            rows, s, batch.anchors[b], batch.verts[b], l, et_t=et_t
-        )
+        with trace.span("overflow/relist", s=s):
+            parts[b] = _list_tile_host(
+                rows, s, batch.anchors[b], batch.verts[b], l, et_t=et_t
+            )
     return np.concatenate(parts)
 
 
@@ -317,24 +320,26 @@ def list_batch(
     A = jnp.asarray(bucket_rows(batch.A))
     cand = jnp.asarray(bucket_rows(batch.cand))
     if capacity is None:
-        counts = np.asarray(
-            kops.count_tiles(A, cand, l, backend=backend, interpret=interpret)
-        )
+        with trace.span("device/sizing", B=B, T=batch.T):
+            counts = np.asarray(
+                kops.count_tiles(
+                    A, cand, l, backend=backend, interpret=interpret
+                )
+            )
         cap = capacity_for(counts, max_capacity, policy=cap_policy)
     else:
         cap = max(1, int(capacity))
-    bufs, cnt, ovf = kops.list_tiles(
-        A, cand, l, capacity=cap, backend=backend, interpret=interpret
-    )
-    return decode_batch(
-        batch,
-        np.asarray(bufs)[:B],
-        np.asarray(cnt)[:B],
-        np.asarray(ovf)[:B],
-        l,
-        stats,
-        et_t=et_t,
-    )
+    with trace.span("device/wait", B=B, T=batch.T, capacity=cap):
+        bufs, cnt, ovf = kops.list_tiles(
+            A, cand, l, capacity=cap, backend=backend, interpret=interpret
+        )
+        bufs, cnt, ovf = (
+            np.asarray(bufs)[:B],
+            np.asarray(cnt)[:B],
+            np.asarray(ovf)[:B],
+        )
+    with trace.span("decode", B=B, T=batch.T):
+        return decode_batch(batch, bufs, cnt, ovf, l, stats, et_t=et_t)
 
 
 def stream_cliques(
@@ -370,8 +375,9 @@ def stream_cliques(
     and feeds the sink in deterministic stream order.  ``devices``
     routes batches through :class:`repro.runtime.dispatch.ListDispatcher`
     (per-device placement, double-buffered staging, FIFO harvest +
-    decode-worker overlap -- same knobs as the counting engine).  ``backend`` selects the kernel
-    implementation (``repro.kernels.ops`` registry; emitted rows are
+    decode-worker overlap -- same knobs as the counting engine).
+    ``backend`` selects the kernel implementation (``repro.kernels.ops``
+    registry; emitted rows are
     byte-identical across backends).  Requires k >= 3 (the k <= 2 cases
     have closed forms; see ``ebbkc.list_cliques``).
 

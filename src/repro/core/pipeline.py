@@ -48,6 +48,7 @@ from .bitops import pack_bits as _pack_bits
 from .graph import Graph, greedy_coloring, color_vertex_order, ragged_expand
 from .tiles import Tile
 from .truss import TrussDecomposition, truss_decomposition
+from ..obs import trace
 
 #: power-of-two tile-size bins; tiles wider than the last bin spill to host
 BINS = (32, 64, 128, 256)
@@ -413,16 +414,20 @@ def cached_plan(g: Graph, order: str = "hybrid", *,
     if plan is not None and family in plan._tables:
         if stats is not None:
             stats.plan_cache_hit = True
+        trace.instant("plan/cache_hit", source="memory", order=order)
         return plan
     if cache_dir is not None:
-        plan = load_plan(os.path.join(cache_dir, key))
+        with trace.span("plan/load", order=order):
+            plan = load_plan(os.path.join(cache_dir, key))
         if plan is not None and family in plan._tables:
             if stats is not None:
                 stats.plan_cache_hit = True
+            trace.instant("plan/cache_hit", source="disk", order=order)
             _plan_cache_insert(key, plan)
             return plan
     t0 = time.perf_counter()
-    plan = build_plan(g, order=order)
+    with trace.span("plan/build", order=order, n=g.n, m=g.m):
+        plan = build_plan(g, order=order)
     if stats is not None:
         stats.plan_build_s += time.perf_counter() - t0
     if cache_dir is not None:
@@ -695,10 +700,12 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
         raise ValueError("bins must be multiples of 32")
     plan = _as_plan(source)
     t0 = time.perf_counter()
-    table = plan.table(order)
-    ids = table.select(k, use_rule2=use_rule2)
-    sizes = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)
-    binidx = np.searchsorted(np.asarray(bins), sizes)
+    with trace.span("extract", order=order, k=k) as _sp:
+        table = plan.table(order)
+        ids = table.select(k, use_rule2=use_rule2)
+        sizes = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)
+        binidx = np.searchsorted(np.asarray(bins), sizes)
+        _sp.set(tiles=int(ids.size))
     extract_s = time.perf_counter() - t0
     if timings is not None:
         timings["extract"] = timings.get("extract", 0.0) + extract_s
@@ -729,15 +736,17 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
     if serial:
         for T, chunk in work:
             t1 = time.perf_counter()
-            batch = _pack_batch(plan.g, table, chunk, T, order)
+            with trace.span("pack", T=T, tiles=len(chunk)):
+                batch = _pack_batch(plan.g, table, chunk, T, order)
             bill_pack(time.perf_counter() - t1)
             yield batch
         return
 
     def pack_job(T: int, chunk: np.ndarray) -> Tuple[TileBatch, float]:
         t1 = time.perf_counter()
-        return (_pack_batch(plan.g, table, chunk, T, order),
-                time.perf_counter() - t1)
+        with trace.span("pack", T=T, tiles=len(chunk)):
+            batch = _pack_batch(plan.g, table, chunk, T, order)
+        return batch, time.perf_counter() - t1
 
     depth = max(2, 2 * workers) if prefetch is None else max(1, int(prefetch))
     occ_sum, occ_n, occ_peak = 0.0, 0, 0
@@ -751,7 +760,12 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
             occ_peak = max(occ_peak, len(futs))
             occ_sum += len(futs) / depth
             occ_n += 1
-            batch, dt = futs.popleft().result()
+            fut = futs.popleft()
+            if fut.done():
+                batch, dt = fut.result()
+            else:
+                with trace.span("pack/wait", depth=len(futs) + 1):
+                    batch, dt = fut.result()
             nxt = next(it, None)
             if nxt is not None:
                 futs.append(ex.submit(pack_job, *nxt))

@@ -50,6 +50,8 @@ from . import intersect as _is
 from . import lax_backend as _lax
 from . import triangle_mm as _tm
 from . import ref as _ref
+from ..obs import profile as obs_profile
+from ..obs import trace
 
 BACKENDS = ("auto", "pallas", "lax", "ref", "autotune")
 
@@ -127,6 +129,7 @@ def autotune_backend(mode: str, l: int, T: int,
     got = _AUTOTUNE_CACHE.get(key)
     if got is not None:
         tune.note_event(lookup=True)
+        trace.instant("tune/cache_hit", source="memory", mode=mode, T=T)
         return got
     rkey = tune.backend_key(mode, l, T,
                             capacity if mode == "list" else None)
@@ -135,14 +138,16 @@ def autotune_backend(mode: str, l: int, T: int,
         best = rec.data["winner"]
         _AUTOTUNE_CACHE[key] = best
         tune.note_event(lookup=True)
+        trace.instant("tune/cache_hit", source="record", mode=mode, T=T)
         return best
     # park compile seconds accrued by earlier *real* kernel calls so the
     # drain below discards only the microbenchmark's own compiles
     pending = consume_compile_s()
     t0 = time.perf_counter()
-    best, times = tune_search.microbench_backend(mode, l, T,
-                                                 capacity=capacity,
-                                                 trials=trials)
+    with trace.span("tune/microbench", mode=mode, l=l, T=T, trials=trials):
+        best, times = tune_search.microbench_backend(mode, l, T,
+                                                     capacity=capacity,
+                                                     trials=trials)
     tune_s = time.perf_counter() - t0
     # the microbenchmark compiled both candidates through the registry;
     # drain those first-call seconds so they are not billed to whatever
@@ -217,9 +222,13 @@ def _timed_first_call(key: tuple, fn, *args):
     key = key + (_arg_device(args[0]),)
     if key in _SEEN_SIGNATURES:
         return fn(*args)
+    sig = "/".join(str(p) for p in key)
     t0 = time.perf_counter()
-    out = jax.block_until_ready(fn(*args))
-    _COMPILE_S += time.perf_counter() - t0
+    with trace.span("kernel/compile", sig=sig):
+        out = jax.block_until_ready(fn(*args))
+    dt = time.perf_counter() - t0
+    _COMPILE_S += dt
+    obs_profile.note_kernel(sig, compile_s=dt)
     _SEEN_SIGNATURES.add(key)
     return out
 

@@ -23,6 +23,10 @@ from ..core.engine_np import Stats
 from ..core.graph import Graph
 from ..data import graphs as gdata
 from ..launch.mesh import make_local_mesh
+from ..obs import metrics as obs_metrics
+from ..obs import trace
+from ..obs.export import MetricsServer
+from ..obs.logging import LEVELS, get_logger, setup_logging
 from ..runtime.dispatch import (Dispatcher, dispatch_scheduled,
                                 resolve_devices)
 from .. import tune
@@ -46,6 +50,19 @@ def load_graph(desc: str) -> Graph:
 def parse_devices(spec: str):
     """CLI device spec: "all" or an int count (graceful clamp)."""
     return "all" if spec == "all" else int(spec)
+
+
+def _finish_obs(args, stats, metrics_server):
+    """Flush run observability: publish stats, export trace, stop server."""
+    if stats is not None:
+        obs_metrics.observe_stats(stats)
+    if args.trace_out:
+        trace.export(args.trace_out)
+        print(f"trace: wrote {args.trace_out} "
+              f"({len(trace.events())} events, "
+              f"{trace.dropped()} dropped)")
+    if metrics_server is not None:
+        metrics_server.close()
 
 
 def main():
@@ -98,11 +115,30 @@ def main():
                          "compiles; also settable via REPRO_TUNE_CACHE")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
+    ap.add_argument("--log-level", default="warning", choices=list(LEVELS),
+                    help="repro.* logger verbosity (obs/logging)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a structured span trace of the whole run "
+                         "and write it as Chrome/Perfetto trace_event JSON "
+                         "(open at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve Prometheus /metrics on 127.0.0.1:PORT for "
+                         "the run's duration (0 = ephemeral port)")
     args = ap.parse_args()
 
+    setup_logging(args.log_level)
+    log = get_logger("launch.clique")
+    if args.trace_out:
+        trace.configure(enabled=True)
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = MetricsServer(port=args.metrics_port)
+        print(f"metrics: {metrics_server.address}/metrics")
     if args.tune_cache:
         tune.configure(args.tune_cache)
     g = load_graph(args.graph)
+    log.info("loaded %s: n=%d m=%d", args.graph, g.n, g.m)
     print(f"graph: n={g.n} m={g.m}")
     l = args.k - 2
     devices = resolve_devices(parse_devices(args.devices))
@@ -151,6 +187,7 @@ def main():
             ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
             want = ref if args.max_out is None else min(args.max_out, ref)
             print(f"host count: {ref}  match={want == st.emitted_cliques}")
+        _finish_obs(args, st, metrics_server)
         return
 
     stats = Stats()
@@ -225,6 +262,7 @@ def main():
     if args.verify:
         ref = ebbkc.count(g, args.k, order=args.order, plan=plan).count
         print(f"host engine: {ref}  match={ref == total}")
+    _finish_obs(args, stats, metrics_server)
 
 
 if __name__ == "__main__":

@@ -45,6 +45,8 @@ import numpy as np
 
 from ..core import engine_jax, pipeline
 from ..core.engine_np import Stats
+from ..obs import profile as obs_profile
+from ..obs import trace
 from .clique_scheduler import schedule_batches, tile_costs
 
 if hasattr(jax, "shard_map"):  # newer jax
@@ -90,6 +92,23 @@ def batch_bytes(n_tiles: int, T: int) -> int:
     roofline bandwidth denominator paired with :func:`batch_flops`."""
     W = int(T) // 32
     return int(n_tiles) * (int(T) * W + W) * 4
+
+
+def _account_devices(stats: Stats, per_device_tiles, T: int) -> None:
+    """Fold one batch's per-device tile counts into ``stats``.
+
+    The single accounting path shared by both dispatchers: builds a delta
+    :class:`Stats` carrying only the per-device maps and folds it in via
+    ``Stats.merge`` (the one merge routine -- see ``Stats._MERGE_KINDS``).
+    """
+    delta = Stats()
+    for d, c in enumerate(per_device_tiles):
+        if not c:
+            continue
+        delta.device_tiles[d] = int(c)
+        delta.device_flops[d] = batch_flops(int(c), T)
+        delta.device_bytes[d] = batch_bytes(int(c), T)
+    stats.merge(delta)
 
 
 def _mesh_batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
@@ -241,6 +260,7 @@ class _InFlight:
     out: Tuple[jax.Array, jax.Array, jax.Array, jax.Array]
     rows: int = 0  # un-padded batch rows (slice bound for routed harvest)
     route: object = None  # per-request delivery callback, or None
+    T: int = 0  # tile width (profiling attribution)
 
 
 class Dispatcher:
@@ -321,10 +341,17 @@ class Dispatcher:
         if sig in _COMPILED_STEPS:
             return self._step(A, cand)
         t0 = time.perf_counter()
-        out = jax.block_until_ready(self._step(A, cand))
-        self.stats.kernel_compile_s += time.perf_counter() - t0
+        with trace.span("kernel/compile", sig=self._sig(A.shape[0], A.shape[1])):
+            out = jax.block_until_ready(self._step(A, cand))
+        dt = time.perf_counter() - t0
+        self.stats.kernel_compile_s += dt
+        obs_profile.note_kernel(self._sig(A.shape[0], A.shape[1]), compile_s=dt)
         _COMPILED_STEPS.add(sig)
         return out
+
+    def _sig(self, B: int, T: int) -> str:
+        """Kernel-signature label for profiling attribution."""
+        return f"count[l={self.l},T={T},B={B},backend={self.stats.backend}]"
 
     @property
     def n_devices(self) -> int:
@@ -332,14 +359,7 @@ class Dispatcher:
         return len(self.devices)
 
     def _account(self, per_device_tiles: np.ndarray, T: int) -> None:
-        tiles, flops = self.stats.device_tiles, self.stats.device_flops
-        nbytes = self.stats.device_bytes
-        for d, c in enumerate(per_device_tiles):
-            if not c:
-                continue
-            tiles[d] = tiles.get(d, 0) + int(c)
-            flops[d] = flops.get(d, 0) + batch_flops(int(c), T)
-            nbytes[d] = nbytes.get(d, 0) + batch_bytes(int(c), T)
+        _account_devices(self.stats, per_device_tiles, T)
 
     def submit(
         self,
@@ -367,34 +387,37 @@ class Dispatcher:
         from one thread; only the ``route`` callbacks themselves may hand
         work to other threads.
         """
-        if self.mesh is not None:
-            d = -1
-            A = _pad_rows(batch.A, self._n_shards)
-            cand = _pad_rows(batch.cand, self._n_shards)
-            A, cand = jax.device_put((A, cand), self._in_shardings)
-            shard_rows = A.shape[0] // self._n_shards
-            per_dev = np.bincount(
-                np.minimum(np.arange(batch.B) // shard_rows, self._n_shards - 1),
-                minlength=self._n_shards,
-            )
-        else:
-            d = int(np.argmin(self._loads)) if device is None else int(device)
-            cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
-            self._loads[d] += cost
-            # batch-shape bucketing: ragged tail chunks pad to pow2 and
-            # reuse the full chunks' executables (padding counts 0)
-            A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
-            cand = jax.device_put(engine_jax.bucket_rows(batch.cand), self.devices[d])
-            per_dev = np.zeros(self.n_devices, dtype=np.int64)
-            per_dev[d] = batch.B
-        out = self._run_step(A, cand, d)
+        with trace.span("device/stage", B=batch.B, T=batch.T):
+            if self.mesh is not None:
+                d = -1
+                A = _pad_rows(batch.A, self._n_shards)
+                cand = _pad_rows(batch.cand, self._n_shards)
+                A, cand = jax.device_put((A, cand), self._in_shardings)
+                shard_rows = A.shape[0] // self._n_shards
+                per_dev = np.bincount(
+                    np.minimum(np.arange(batch.B) // shard_rows, self._n_shards - 1),
+                    minlength=self._n_shards,
+                )
+            else:
+                d = int(np.argmin(self._loads)) if device is None else int(device)
+                cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
+                self._loads[d] += cost
+                # batch-shape bucketing: ragged tail chunks pad to pow2 and
+                # reuse the full chunks' executables (padding counts 0)
+                A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
+                cand = jax.device_put(
+                    engine_jax.bucket_rows(batch.cand), self.devices[d]
+                )
+                per_dev = np.zeros(self.n_devices, dtype=np.int64)
+                per_dev[d] = batch.B
+            out = self._run_step(A, cand, d)
         self.placements.append(d)
         self.tiles += batch.B
         self._account(per_dev, batch.T)
         if not self._inflight:
             # in-flight window (re)opens now; overlap accrues from here
             self._overlap_mark = time.perf_counter()
-        self._inflight.append(_InFlight(d, out, batch.B, route))
+        self._inflight.append(_InFlight(d, out, batch.B, route, batch.T))
         if not self.async_staging:
             self._drain()
         else:
@@ -414,15 +437,32 @@ class Dispatcher:
         # by construction.
         if self.async_staging:
             self.stats.staging_overlap_s += max(0.0, t0 - self._overlap_mark)
-        jax.block_until_ready(p.out)
+        B = int(p.out[0].shape[0])
+        rows = p.rows or B
+        with trace.span(
+            "device/harvest",
+            device=p.device,
+            sig=self._sig(B, p.T),
+            flops=batch_flops(rows, p.T),
+            bytes=batch_bytes(rows, p.T),
+        ):
+            jax.block_until_ready(p.out)
         t1 = time.perf_counter()
+        obs_profile.note_kernel(
+            self._sig(B, p.T),
+            execute_s=t1 - t0,
+            calls=1,
+            flops=batch_flops(rows, p.T),
+            nbytes=batch_bytes(rows, p.T),
+        )
         self._overlap_mark = t1  # blocked interval [t0, t1] is not overlap
-        if p.route is None:
-            self.total += engine_jax.combine_counts(*p.out, self.l, self.et)
-        else:
-            # multi-tenant: hand the un-padded partial rows to the owner
-            # (shape padding appends rows, so a head slice removes it)
-            p.route(*(np.asarray(x)[: p.rows] for x in p.out))
+        with trace.span("combine", routed=p.route is not None):
+            if p.route is None:
+                self.total += engine_jax.combine_counts(*p.out, self.l, self.et)
+            else:
+                # multi-tenant: hand the un-padded partial rows to the owner
+                # (shape padding appends rows, so a head slice removes it)
+                p.route(*(np.asarray(x)[: p.rows] for x in p.out))
         t2 = time.perf_counter()
         if self.stage_times is not None:
             st = self.stage_times
@@ -648,35 +688,37 @@ class ListDispatcher:
         if route is None and self.sink is None:
             raise ValueError("emit mode requires a CliqueSink (or per-"
                              "batch route callbacks)")
-        d = int(np.argmin(self._loads)) if device is None else int(device)
-        cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
-        self._loads[d] += cost
-        # batch-shape bucketing, as in Dispatcher.submit; the padded
-        # zero-candidate lanes are sliced off again in the decode job
-        A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
-        cand = jax.device_put(engine_jax.bucket_rows(batch.cand), self.devices[d])
-        self.placements.append(d)
-        self.tiles += batch.B
-        tiles, flops = self.stats.device_tiles, self.stats.device_flops
-        tiles[d] = tiles.get(d, 0) + batch.B
-        flops[d] = flops.get(d, 0) + batch_flops(batch.B, batch.T)
-        nbytes = self.stats.device_bytes
-        nbytes[d] = nbytes.get(d, 0) + batch_bytes(batch.B, batch.T)
-        if self.capacity is None or self.capacity == "sized":
-            # async count pass; readiness is probed at promotion time
-            hard = self._count_step(A, cand)[0]
-            self._pending.append((d, batch, (A, cand, hard), route))
-        else:
-            if self.capacity == "speculative":  # ratchet guess
-                cap = min(self._cap_ratchet.get(batch.T, SPECULATIVE_CAP0),
-                          self.max_capacity)
-            else:
-                cap = max(1, int(self.capacity))
-            out = kops.list_tiles(
-                A, cand, self.l, capacity=cap,
-                backend=self.backend, interpret=self.interpret,
+        with trace.span("device/stage", B=batch.B, T=batch.T):
+            d = int(np.argmin(self._loads)) if device is None else int(device)
+            cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
+            self._loads[d] += cost
+            # batch-shape bucketing, as in Dispatcher.submit; the padded
+            # zero-candidate lanes are sliced off again in the decode job
+            A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
+            cand = jax.device_put(
+                engine_jax.bucket_rows(batch.cand), self.devices[d]
             )
-            self._inflight.append((d, batch, (A, cand), out, route))
+            self.placements.append(d)
+            self.tiles += batch.B
+            per_dev = np.zeros(self.n_devices, dtype=np.int64)
+            per_dev[d] = batch.B
+            with self._acct_lock:
+                _account_devices(self.stats, per_dev, batch.T)
+            if self.capacity is None or self.capacity == "sized":
+                # async count pass; readiness is probed at promotion time
+                hard = self._count_step(A, cand)[0]
+                self._pending.append((d, batch, (A, cand, hard), route))
+            else:
+                if self.capacity == "speculative":  # ratchet guess
+                    cap = min(self._cap_ratchet.get(batch.T, SPECULATIVE_CAP0),
+                              self.max_capacity)
+                else:
+                    cap = max(1, int(self.capacity))
+                out = kops.list_tiles(
+                    A, cand, self.l, capacity=cap,
+                    backend=self.backend, interpret=self.interpret,
+                )
+                self._inflight.append((d, batch, (A, cand), out, route))
         self._promote(block=False)
         if not self.async_staging:
             self._drain()
@@ -704,7 +746,8 @@ class ListDispatcher:
             if not block and not _is_ready(hard):
                 break
             t0 = time.perf_counter()
-            counts = np.asarray(hard)  # blocks only until THIS batch
+            with trace.span("device/sizing", B=batch.B, T=batch.T):
+                counts = np.asarray(hard)  # blocks only until THIS batch
             if self.stage_times is not None:
                 with self._acct_lock:
                     self.stage_times["device"] = (
@@ -740,9 +783,17 @@ class ListDispatcher:
         from ..kernels import ops as kops
 
         t0 = time.perf_counter()
+        sig = (f"list[l={self.l},T={batch.T},B={batch.B},"
+               f"backend={self.backend}]")
         # slice off the bucketing padding (zero-candidate lanes) before
         # ratchet/decode -- padding rows count 0 and never overflow
-        bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out)
+        with trace.span(
+            "device/wait",
+            sig=sig,
+            flops=batch_flops(batch.B, batch.T),
+            bytes=batch_bytes(batch.B, batch.T),
+        ):
+            bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out)
         if self.capacity == "speculative":
             # the kernel reported true counts, so a too-small guess is
             # retried once on the device at the exact rounded size --
@@ -756,21 +807,32 @@ class ListDispatcher:
             )
             if ovf.any() and true_cap > bufs.shape[1]:
                 A, cand = acand
-                out2 = kops.list_tiles(
-                    A, cand, self.l, capacity=true_cap,
-                    backend=self.backend, interpret=self.interpret,
-                )
-                bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out2)
+                with trace.span("device/relist", B=batch.B, T=batch.T,
+                                capacity=true_cap):
+                    out2 = kops.list_tiles(
+                        A, cand, self.l, capacity=true_cap,
+                        backend=self.backend, interpret=self.interpret,
+                    )
+                    bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out2)
                 with self._acct_lock:
                     self.stats.emit_retries += 1
         t1 = time.perf_counter()
-        if route is not None:
-            emitted = int(route(batch, bufs, cnt, ovf))
-        else:
-            arr = listing.decode_batch(
-                batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
-            )
-            emitted = self.sink.emit(arr)
+        obs_profile.note_kernel(
+            sig,
+            execute_s=t1 - t0,
+            calls=1,
+            flops=batch_flops(batch.B, batch.T),
+            nbytes=batch_bytes(batch.B, batch.T),
+        )
+        with trace.span("decode", B=batch.B, T=batch.T,
+                        routed=route is not None):
+            if route is not None:
+                emitted = int(route(batch, bufs, cnt, ovf))
+            else:
+                arr = listing.decode_batch(
+                    batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
+                )
+                emitted = self.sink.emit(arr)
         t2 = time.perf_counter()
         with self._acct_lock:
             self.stats.emitted_cliques += emitted

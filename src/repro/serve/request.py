@@ -20,15 +20,21 @@ client thread only ever blocks on the resolution event.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 from collections import deque
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
 
 from ..core import listing
 from ..core.engine_np import Stats
+from ..obs import trace
+
+#: process-wide ticket-id source; the id keys the request's async span
+#: tree in exported traces and is stable for the request's lifetime
+_RID = itertools.count(1)
 
 #: early-termination threshold baked into the serving tier (the engines'
 #: default); per-request et knobs would forbid cross-request batch fusion
@@ -77,6 +83,10 @@ class RequestResult:
     deadline_s: Optional[float] = None
     deadline_missed: bool = False
     stats: Optional[Stats] = None
+    # per-stage latency breakdown: "queue" (wait before admission),
+    # "fuse" (buffer wait), "device" (flush-to-delivery, overlapping
+    # across fused requests), "reorder" (sequencer park time)
+    stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class Request:
@@ -125,6 +135,9 @@ class Request:
         self.max_out = max_out
         self.deadline_s = deadline_s
         self.stats = Stats()
+        self.rid = next(_RID)  # ticket id; keys the request's trace tree
+        self.stage_s: Dict[str, float] = {}
+        self._stage_lock = threading.Lock()
         self.submit_t: Optional[float] = None  # monotonic, set at admission
         self.deadline_t: Optional[float] = None  # absolute monotonic
         self._external_sink = sink is not None
@@ -152,6 +165,19 @@ class Request:
         self.submit_t = time.monotonic() if now is None else now
         if self.deadline_s is not None:
             self.deadline_t = self.submit_t + self.deadline_s
+        trace.async_begin("request", id=self.rid, k=self.k, mode=self.mode)
+
+    def mark_admitted(self, now: Optional[float] = None) -> None:
+        """Stamp scheduler pickup; the queue wait becomes attributable."""
+        now = time.monotonic() if now is None else now
+        if self.submit_t is not None:
+            self.add_stage("queue", now - self.submit_t)
+        trace.async_instant("request/admit", id=self.rid)
+
+    def add_stage(self, stage: str, dt: float) -> None:
+        """Accrue ``dt`` seconds to one lifecycle stage (thread-safe)."""
+        with self._stage_lock:
+            self.stage_s[stage] = self.stage_s.get(stage, 0.0) + dt
 
     def next_seq(self) -> int:
         """Assign the next chunk sequence number (scheduler thread only)."""
@@ -178,9 +204,18 @@ class Request:
                 self._count += int(payload)
                 self._delivered += 1
             else:
-                self._parked[seq] = payload
+                self._parked[seq] = (payload, time.perf_counter_ns())
                 while self._release_next in self._parked:
-                    rows = self._parked.pop(self._release_next)
+                    rows, t_park = self._parked.pop(self._release_next)
+                    dur_ns = time.perf_counter_ns() - t_park
+                    with self._stage_lock:
+                        self.stage_s["reorder"] = (
+                            self.stage_s.get("reorder", 0.0) + dur_ns / 1e9
+                        )
+                    trace.complete(
+                        "reorder/park", t_park, dur_ns,
+                        rid=self.rid, seq=self._release_next,
+                    )
                     self._release_next += 1
                     self._delivered += 1
                     self._emit_locked(rows)
@@ -198,6 +233,7 @@ class Request:
             if self._event.is_set():
                 return
             self._error = exc
+            trace.async_end("request", id=self.rid, error=repr(exc))
             self._event.set()
 
     # -- internals ----------------------------------------------------------
@@ -224,6 +260,8 @@ class Request:
             self.stats.sink_bytes += self._sink.bytes_written
             if not self._external_sink:
                 rows = self._sink.result()
+        with self._stage_lock:
+            stage_s = dict(self.stage_s)
         self._result = RequestResult(
             kind=self.mode,
             count=self._count if self.mode == "count" else None,
@@ -233,6 +271,12 @@ class Request:
             deadline_s=self.deadline_s,
             deadline_missed=missed,
             stats=self.stats,
+            stage_s=stage_s,
+        )
+        trace.async_end(
+            "request", id=self.rid,
+            latency_ms=round(latency * 1e3, 3),
+            deadline_missed=missed,
         )
         self._event.set()
         if self._on_done is not None:

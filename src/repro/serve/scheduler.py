@@ -41,6 +41,7 @@ import numpy as np
 from ..core import engine_jax, listing, pipeline
 from ..core import tiles as tiles_mod
 from ..core.engine_np import Stats
+from ..obs import trace
 from ..runtime.dispatch import Dispatcher, ListDispatcher, resolve_devices
 from .request import ET_T, Request
 
@@ -65,6 +66,13 @@ class ServeStats:
     fused_chunks: int = 0
     deadline_flushes: int = 0
     spill_tiles: int = 0
+
+    # every field is a monotonic total (repro.obs.metrics publication)
+    _METRIC_KINDS = {f: "sum" for f in (
+        "admitted", "rejected", "completed", "deadline_missed",
+        "fused_batches", "cross_request_batches", "fused_rows",
+        "fused_chunks", "deadline_flushes", "spill_tiles",
+    )}
 
 
 def edf_pick(entries: List[Tuple[Optional[float], float, int]]
@@ -134,6 +142,7 @@ class _FuseBuffer:
 
     def __init__(self, now: float) -> None:
         self.chunks: List[Tuple[Request, int, pipeline.TileBatch]] = []
+        self.pull_ts: List[float] = []  # per-chunk buffer-entry times
         self.rows = 0
         self.created_t = now  # first-chunk time: bounds buffering latency
 
@@ -239,10 +248,13 @@ class BatchScheduler:
         (O(delta*m) on a cold graph); warm graphs hit the keyed plan
         cache and admission is O(selected tiles) index work.
         """
-        plan = pipeline.cached_plan(
-            req.g, req.order, cache_dir=self.plan_cache_dir, stats=req.stats)
-        table = plan.table(req.order)
-        ids = table.select(req.k, use_rule2=req.use_rule2)
+        req.mark_admitted()
+        with trace.span("serve/admit", rid=req.rid, k=req.k, mode=req.mode):
+            plan = pipeline.cached_plan(
+                req.g, req.order, cache_dir=self.plan_cache_dir,
+                stats=req.stats)
+            table = plan.table(req.order)
+            ids = table.select(req.k, use_rule2=req.use_rule2)
         stream = pipeline.stream_batches(
             plan, req.k, order=req.order, use_rule2=req.use_rule2,
             batch_size=self.chunk_tiles, pack_workers=0, stats=req.stats)
@@ -291,12 +303,17 @@ class BatchScheduler:
             a.remaining -= 1
             with self.stats_lock:
                 self.stats.spill_tiles += 1
+            t0 = time.monotonic()
             if req.mode == "count":
-                req.deliver(seq, engine_jax.count_spilled(
-                    item, req.order, req.l, req.stats, ET_T, req.use_rule2))
+                with trace.span("spill/count", s=item.s, rid=req.rid):
+                    payload = engine_jax.count_spilled(
+                        item, req.order, req.l, req.stats, ET_T,
+                        req.use_rule2)
             else:
-                req.deliver(seq, listing.list_spilled(
-                    item, req.l, req.stats, et_t=ET_T))
+                payload = listing.list_spilled(
+                    item, req.l, req.stats, et_t=ET_T)
+            req.add_stage("device", time.monotonic() - t0)
+            req.deliver(seq, payload)
             return True
         a.remaining -= item.B
         key = (req.mode, req.l, item.T)
@@ -304,6 +321,7 @@ class BatchScheduler:
         if buf is None:
             buf = self._buffers[key] = _FuseBuffer(time.monotonic())
         buf.chunks.append((req, seq, item))
+        buf.pull_ts.append(time.monotonic())
         buf.rows += item.B
         if buf.rows >= self.fuse_rows:
             self._flush(key)
@@ -333,29 +351,49 @@ class BatchScheduler:
         if buf is None or not buf.chunks:
             return
         mode, l, _T = key
+        flush_t = time.monotonic()
+        for (req, _seq, _b), t_pull in zip(buf.chunks, buf.pull_ts):
+            req.add_stage("fuse", flush_t - t_pull)
         fused, segments = fuse_chunks(buf.chunks)
+        n_owners = len({id(r) for r, _, _, _, _ in segments})
         with self.stats_lock:
             self.stats.fused_batches += 1
             self.stats.fused_rows += fused.B
             self.stats.fused_chunks += len(segments)
-            if len({id(r) for r, _, _, _, _ in segments}) > 1:
+            if n_owners > 1:
                 self.stats.cross_request_batches += 1
+        trace.instant(
+            "serve/fuse_flush", mode=mode, l=l, T=fused.T,
+            rows=fused.B, chunks=len(segments), owners=n_owners,
+        )
         if mode == "count":
 
-            def route(hard, nv, t, f, segments=segments, l=l):
+            def route(hard, nv, t, f, segments=segments, l=l,
+                      flush_t=flush_t):
+                dt = time.monotonic() - flush_t
                 for req, seq, s0, s1, _ in segments:
+                    req.add_stage("device", dt)
+                    trace.async_instant(
+                        "request/device", id=req.rid, seq=seq,
+                        rows=s1 - s0)
                     req.deliver(seq, engine_jax.combine_counts(
                         hard[s0:s1], nv[s0:s1], t[s0:s1], f[s0:s1], l, True))
 
             self._count_disp(l).submit(fused, route=route)
         else:
 
-            def route(_batch, bufs, cnt, ovf, segments=segments, l=l):
+            def route(_batch, bufs, cnt, ovf, segments=segments, l=l,
+                      flush_t=flush_t):
+                dt = time.monotonic() - flush_t
                 total = 0
                 for req, seq, s0, s1, chunk in segments:
                     rows = listing.decode_batch(
                         chunk, bufs[s0:s1], cnt[s0:s1], ovf[s0:s1], l,
                         req.stats, et_t=ET_T)
+                    req.add_stage("device", dt)
+                    trace.async_instant(
+                        "request/device", id=req.rid, seq=seq,
+                        rows=rows.shape[0])
                     req.deliver(seq, rows)
                     total += rows.shape[0]
                 return total

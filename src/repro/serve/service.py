@@ -30,6 +30,9 @@ from typing import Optional, Union
 
 from ..core.engine_np import Stats
 from ..core.graph import Graph
+from ..obs import metrics as obs_metrics
+from ..obs import trace
+from ..obs.export import MetricsServer
 from .request import (Request, RequestQueue, ServiceClosed, Ticket)
 from .scheduler import BatchScheduler, ServeStats
 
@@ -81,10 +84,15 @@ class CliqueService:
         plan_cache_dir: Optional[str] = None,
         async_staging: bool = True,
         max_inflight: int = 2,
+        metrics_port: Optional[int] = None,
         start: bool = True,
     ) -> None:
         self.stats = ServeStats()
         self.engine_stats = Stats()
+        # service-level rollup of completed requests' per-request Stats
+        # (folded in via Stats.merge at completion; the dispatcher-shared
+        # engine_stats tracks device-side work, this tracks request-side)
+        self.request_stats = Stats()
         self._sched = BatchScheduler(
             devices=devices,
             backend=backend,
@@ -109,6 +117,13 @@ class CliqueService:
         self._closing = threading.Event()
         self._error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
+        # /metrics exposition (off by default; metrics_port=0 = ephemeral)
+        self._metrics_server: Optional[MetricsServer] = None
+        self._registry = obs_metrics.get_registry()
+        if metrics_port is not None:
+            self._registry.add_collector(self._collect_metrics)
+            self._metrics_server = MetricsServer(
+                port=metrics_port, registry=self._registry)
         if start:
             self.start()
 
@@ -148,6 +163,10 @@ class CliqueService:
             self._thread.join(timeout)
             self._thread = None
         self._sched.finish()
+        if self._metrics_server is not None:
+            self._registry.remove_collector(self._collect_metrics)
+            self._metrics_server.close()
+            self._metrics_server = None
 
     def __enter__(self) -> "CliqueService":
         """Context-manager entry: the started service itself."""
@@ -159,6 +178,13 @@ class CliqueService:
         self.close()
 
     # -- client API ---------------------------------------------------------
+
+    @property
+    def metrics_address(self) -> Optional[str]:
+        """``host:port`` of the /metrics endpoint, or None when disabled."""
+        if self._metrics_server is None:
+            return None
+        return self._metrics_server.address
 
     def register_graph(self, name: str, g: Graph) -> None:
         """Register ``g`` under ``name`` for by-name submission.
@@ -229,6 +255,7 @@ class CliqueService:
         except Exception:
             with self._sched.stats_lock:
                 self.stats.rejected += 1
+            trace.async_end("request", id=req.rid, rejected=True)
             raise
         with self._sched.stats_lock:
             self.stats.admitted += 1
@@ -241,6 +268,38 @@ class CliqueService:
             self.stats.completed += 1
             if result.deadline_missed:
                 self.stats.deadline_missed += 1
+            if result.stats is not None:
+                self.request_stats.merge(result.stats)
+        self._registry.histogram(
+            "repro_request_latency_seconds",
+            help="end-to-end request latency (submit to resolve)",
+        ).observe(result.latency_s)
+        for stage, dt in (result.stage_s or {}).items():
+            self._registry.counter(
+                "repro_request_stage_seconds_total",
+                help="wall seconds per request lifecycle stage",
+                stage=stage,
+            ).inc(dt)
+
+    def _collect_metrics(self) -> None:
+        # scrape-time publication of the lifetime accumulators; counters
+        # only move forward (set_total keeps the max) so this is safe to
+        # call concurrently with the scheduler thread mutating the stats
+        with self._sched.stats_lock:
+            obs_metrics.publish_totals(
+                self.stats, "repro_serve", self._registry)
+            obs_metrics.publish_totals(
+                self.engine_stats, "repro_engine", self._registry)
+            obs_metrics.publish_totals(
+                self.request_stats, "repro_request", self._registry)
+        self._registry.gauge(
+            "repro_serve_queue_depth",
+            help="requests waiting for admission",
+        ).set(len(self._queue))
+        self._registry.gauge(
+            "repro_serve_active_requests",
+            help="requests currently being pulled from",
+        ).set(self._sched.n_active)
 
     def _admit_safe(self, req: Request) -> None:
         try:

@@ -28,6 +28,7 @@ import threading
 from typing import Dict, Optional
 
 from . import records as _rec
+from ..obs import metrics as _metrics
 from .records import TuningRecord
 
 #: environment knob: equivalent to calling :func:`configure` at startup
@@ -130,6 +131,21 @@ def note_event(seconds: float = 0.0, lookup: bool = False,
             _TUNE_LOOKUPS += 1
         if miss:
             _TUNE_MISSES += 1
+    if seconds:
+        _metrics.REGISTRY.counter(
+            "repro_tune_seconds_total",
+            help="wall seconds spent in live tuning measurements",
+        ).inc(seconds)
+    if lookup:
+        _metrics.REGISTRY.counter(
+            "repro_tune_lookups_total",
+            help="tuning-record consultations answered from a cache layer",
+        ).inc()
+    if miss:
+        _metrics.REGISTRY.counter(
+            "repro_tune_misses_total",
+            help="tuning lookups that fell back to a live measurement",
+        ).inc()
 
 
 def consume_events() -> tuple:

@@ -32,6 +32,7 @@ import numpy as np
 from . import cache as _cache
 from . import records as _rec
 from .records import TuningRecord
+from ..obs import trace
 
 #: keep in sync with repro.core.listing.MAX_CAPACITY (not imported: the
 #: listing module consumes this package's geometry defaults)
@@ -106,11 +107,14 @@ def resolve_geometry(mode: str, l: int, *,
     inheriting a tuned capacity policy.  Never searches; with no record
     and no arguments this returns exactly the historical defaults.
     """
-    rec = _cache.get(_rec.geometry_key(mode, l))
+    with trace.span("tune/resolve", mode=mode, l=l) as _sp:
+        rec = _cache.get(_rec.geometry_key(mode, l))
+        _sp.set(hit=rec is not None)
     if rec is not None:
         # answered from a tuning record; an absent record notes nothing
         # (an untuned run is not a cache miss)
         _cache.note_event(lookup=True)
+        trace.instant("tune/cache_hit", source="geometry", mode=mode, l=l)
     g = geometry_from_record(rec) if rec is not None else Geometry()
     if batch_size is not None:
         g.batch_size = int(batch_size)
