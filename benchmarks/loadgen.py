@@ -412,6 +412,14 @@ def main(argv=None):
                     help="proportional SLO: deadline = X * the spec's "
                          "measured solo latency (0 = off; overrides "
                          "--deadline-ms)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos mode: inject seeded faults at every "
+                         "repro.resilience site with this probability "
+                         "during the serve-mode run (the oracle and the "
+                         "serial baseline stay fault-free); results must "
+                         "still match the oracle exactly")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="seed of the deterministic fault schedule")
     ap.add_argument("--devices", default="all")
     ap.add_argument("--virtual-devices", type=int, default=0,
                     help="forge N virtual CPU devices (sets XLA_FLAGS; "
@@ -454,6 +462,7 @@ def main(argv=None):
     from repro.obs import trace
     from repro.obs.export import scrape
     from repro.obs.logging import setup_logging
+    from repro.resilience import inject
     from repro.serve import CliqueService
 
     setup_logging(args.log_level)
@@ -540,6 +549,7 @@ def main(argv=None):
                    devices=args.devices, backend=args.backend, config=config)
         if svc is not None:
             s = svc.stats
+            es = svc.engine_stats
             rec["serve_stats"] = {
                 "fused_batches": s.fused_batches,
                 "cross_request_batches": s.cross_request_batches,
@@ -547,6 +557,13 @@ def main(argv=None):
                 "fused_chunks": s.fused_chunks,
                 "deadline_flushes": s.deadline_flushes,
                 "rejected": s.rejected,
+                # resilience counters (nonzero under --fault-rate chaos)
+                "retries": es.retries,
+                "demotions": es.demotions,
+                "isolated_failures": s.isolated_failures,
+                "deadline_cancels": s.deadline_cancels,
+                "shed": s.shed,
+                "faults_injected": inject.fired(),
             }
         print(f"# {mode}/{rec['loop']}: {rec['completed']} ok, "
               f"{rec['mismatches']} mismatches, "
@@ -561,6 +578,16 @@ def main(argv=None):
     failures = 0
     for mode in modes:
         factory = serve_factory if mode == "serve" else serial_factory
+        # chaos mode: seeded injection is scoped to the serve run only --
+        # the oracle (already built) and the serial baseline stay clean,
+        # so any mismatch is a real resilience bug, not a noisy reference
+        chaos = args.fault_rate > 0 and mode == "serve"
+        if chaos:
+            inject.configure(
+                f"seed={args.fault_seed};*={args.fault_rate};"
+                f"kernel.launch={max(args.fault_rate, 0.1)}")
+            print(f"# chaos: injecting faults at rate {args.fault_rate} "
+                  f"(seed {args.fault_seed})", flush=True)
         if args.loop == "closed":
             submit, close, svc = factory()
             # unmeasured epochs of the identical concurrent workload: warm
@@ -590,6 +617,8 @@ def main(argv=None):
                 rec.update(loop="open", rate=rate,
                            stage_breakdown=stage_breakdown(stages))
                 failures += finish_record(rec, mode, svc)
+        if chaos:
+            inject.configure(None)
 
     if args.trace_out:
         trace.export(args.trace_out)

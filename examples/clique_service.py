@@ -64,6 +64,10 @@ def main():
                          "a restarted service reuses tuned backend/geometry "
                          "records and XLA's persistent compilation cache "
                          "instead of re-measuring and re-compiling")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="chaos mode: seeded repro.resilience fault plan "
+                         "(e.g. 'seed=7;*=0.1'); the service keeps every "
+                         "answer exact via retry/demotion")
     ap.add_argument("--log-level", default="warning", choices=list(LEVELS),
                     help="repro.* logger verbosity (obs/logging)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -80,6 +84,11 @@ def main():
         from repro import tune
 
         tune.configure(args.tune_cache)
+    if args.fault_plan:
+        from repro.resilience import inject
+
+        inject.configure(args.fault_plan)
+        print(f"fault injection: {args.fault_plan}")
 
     svc = CliqueService(backend=None if args.backend == "auto"
                         else args.backend,

@@ -1,10 +1,16 @@
-"""Sharded numpy checkpoints: atomic, resumable, mesh-elastic.
+"""Sharded numpy checkpoints: atomic, resumable, mesh-elastic, verified.
 
 Layout: <dir>/step_<N>/{arrays.npz, meta.json, COMMITTED}
 
 * **Atomic**: written to ``step_<N>.tmp`` then ``os.replace``d; a crash
   mid-write never corrupts the latest checkpoint; restore picks the newest
   *committed* step.
+* **Verified**: ``meta.json`` carries a length + sha256 trailer over the
+  raw ``arrays.npz`` bytes; restore checks it before deserializing, so
+  bit-rot or truncation surfaces as a typed
+  :class:`CorruptCheckpointError` instead of a numpy traceback.  Consumers
+  with a rebuild path (plan cache, tune records) pair this with
+  :func:`quarantine` to move the bad step aside and fall back to absent.
 * **Elastic**: arrays are stored as full logical values (gathered); restore
   re-device_puts under whatever shardings the *restarted* mesh provides, so
   a job can come back on a different topology (tested 8 -> 4 devices).
@@ -14,7 +20,11 @@ Layout: <dir>/step_<N>/{arrays.npz, meta.json, COMMITTED}
 """
 from __future__ import annotations
 
+import hashlib
+import io
+import itertools
 import json
+import logging
 import os
 import re
 import shutil
@@ -22,6 +32,17 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 import jax
+
+from ..resilience import inject
+
+log = logging.getLogger("repro.checkpoint")
+
+# unique suffixes for quarantined step dirs within one process
+_QUAR_IDS = itertools.count()
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A committed checkpoint failed integrity checks or did not parse."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -64,9 +85,14 @@ def save_checkpoint(directory: str, step: int, tree,
     os.makedirs(tmp)
     flat = _flatten(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arr_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arr_path, **arrays)
+    with open(arr_path, "rb") as f:
+        blob = f.read()
     meta = {"step": step, "pipeline": pipeline_state or {},
-            "metadata": metadata or {}}
+            "metadata": metadata or {},
+            "integrity": {"nbytes": len(blob),
+                          "sha256": hashlib.sha256(blob).hexdigest()}}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     with open(os.path.join(tmp, "COMMITTED"), "w") as f:
@@ -90,7 +116,8 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore_checkpoint(directory: str, template=None,
-                       step: Optional[int] = None, shardings=None):
+                       step: Optional[int] = None, shardings=None,
+                       _corrupt_site: Optional[str] = None):
     """Restore into the structure of ``template``.
 
     With ``template=None`` the flat array dict is returned as the tree
@@ -102,24 +129,100 @@ def restore_checkpoint(directory: str, template=None,
     ``shardings``: optional pytree (same structure) of jax.sharding.Sharding
     -- this is the elastic-rescale path: arrays are placed under the *new*
     mesh regardless of the topology that wrote them.
+
+    Integrity: when ``meta.json`` carries the length+sha256 trailer (every
+    store written since it was introduced), the raw ``arrays.npz`` bytes
+    are verified *before* deserialization.  Any mismatch, unreadable file,
+    or parse failure raises :class:`CorruptCheckpointError` (never a raw
+    numpy/json traceback).  ``_corrupt_site`` threads the named
+    fault-injection site whose ``corrupt`` rule mutates the blob between
+    read and verify (chaos-testing the detection path).
     """
     if step is None:
         step = latest_step(directory)
         if step is None:
             return None
     path = os.path.join(directory, f"step_{step:010d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
-    flat = {k: data[k] for k in data.files}
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        with open(os.path.join(path, "arrays.npz"), "rb") as f:
+            blob = f.read()
+        if _corrupt_site is not None:
+            blob = inject.corrupt_bytes(_corrupt_site, blob)
+        integ = meta.get("integrity")
+        if integ is not None and (
+            integ.get("nbytes") != len(blob)
+            or integ.get("sha256") != hashlib.sha256(blob).hexdigest()
+        ):
+            raise CorruptCheckpointError(
+                f"{path}: arrays.npz failed its length+digest check")
+        data = np.load(io.BytesIO(blob))
+        flat = {k: data[k] for k in data.files}
+        pipeline_state = meta["pipeline"]
+        metadata = meta["metadata"]
+    except CorruptCheckpointError:
+        raise
+    except Exception as exc:
+        raise CorruptCheckpointError(
+            f"{path}: unreadable checkpoint ({exc!r})") from exc
     tree = flat if template is None else _unflatten_into(template, flat)
     if shardings is not None:
         tree = jax.tree.map(
             lambda x, s: jax.device_put(x, s) if s is not None else x,
             tree, shardings,
             is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    return {"step": step, "tree": tree, "pipeline": meta["pipeline"],
-            "metadata": meta["metadata"]}
+    return {"step": step, "tree": tree, "pipeline": pipeline_state,
+            "metadata": metadata}
+
+
+def quarantine(directory: str, step: Optional[int] = None,
+               reason: str = "") -> Optional[str]:
+    """Move a (corrupt) checkpoint step aside into ``<dir>/quarantine/``.
+
+    The graceful-degradation half of :class:`CorruptCheckpointError`:
+    instead of deleting evidence or letting every restore hit the same
+    bad file, the step directory is renamed under ``quarantine/`` (same
+    filesystem, atomic) so the next save rebuilds cleanly while the bad
+    bytes stay inspectable.  Best-effort: returns the quarantine path, or
+    None when there was nothing to move.  Never raises.
+    """
+    try:
+        if step is None:
+            step = latest_step(directory)
+        if step is None:
+            return None
+        src = os.path.join(directory, f"step_{step:010d}")
+        if not os.path.isdir(src):
+            return None
+        qdir = os.path.join(directory, "quarantine")
+        os.makedirs(qdir, exist_ok=True)
+        dst = os.path.join(
+            qdir, f"step_{step:010d}.{os.getpid()}.{next(_QUAR_IDS)}")
+        os.replace(src, dst)
+    except OSError:
+        return None
+    log.warning("quarantined corrupt checkpoint %s -> %s (%s)",
+                src, dst, reason or "integrity check failed")
+    return dst
+
+
+def restore_checkpoint_safe(directory: str, template=None,
+                            step: Optional[int] = None, shardings=None,
+                            _corrupt_site: Optional[str] = None):
+    """:func:`restore_checkpoint` with the fall-back-to-absent contract.
+
+    A corrupt or unreadable step is quarantined (moved aside with a
+    warning log) and reads as absent (``None``), so callers with a
+    rebuild path -- the plan cache, tune records -- regenerate instead of
+    propagating deserialization tracebacks.
+    """
+    try:
+        return restore_checkpoint(directory, template, step, shardings,
+                                  _corrupt_site=_corrupt_site)
+    except CorruptCheckpointError as exc:
+        quarantine(directory, step, reason=str(exc))
+        return None
 
 
 def gc_checkpoints(directory: str, keep: int = 3) -> None:

@@ -56,6 +56,11 @@ class Stats:
     # ListDispatcher, capacity=None): batches whose capacity guess proved
     # too small and were re-listed once on the device at the exact size
     emit_retries: int = 0
+    # resilience layer (repro.resilience + runtime.dispatch): device batch
+    # attempts re-run after a failure (injected or real), and batches
+    # demoted down the backend ladder (pallas -> lax -> ref -> host)
+    retries: int = 0
+    demotions: int = 0
     # kernel backend registry (repro.kernels.ops): which backend served
     # the query ("host" for the python-int recursion) and the wall seconds
     # spent on first-call kernel compilation (compile + first run, one
@@ -117,6 +122,8 @@ class Stats:
         "overflowed_tiles": "sum",
         "sink_bytes": "sum",
         "emit_retries": "sum",
+        "retries": "sum",
+        "demotions": "sum",
         "backend": "info",
         "kernel_compile_s": "sum",
         "pack_workers": "max",

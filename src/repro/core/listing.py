@@ -40,6 +40,7 @@ from . import pipeline
 from . import tiles as tiles_mod
 from ..kernels import ops as kops
 from ..obs import trace
+from ..resilience import retry as fault_retry
 from ..tune import search as tune_search
 
 #: default cap on the per-tile emit buffer (rows); tiles whose true count
@@ -292,7 +293,35 @@ class ListResult:
 
 
 def _emit(sink: CliqueSink, arr: np.ndarray, stats: Stats) -> None:
+    fault_retry.consume("sink.write")
     stats.emitted_cliques += sink.emit(arr)
+
+
+def host_list_triple(batch: pipeline.TileBatch, l: int):
+    """List an entire batch on the host, as a kernel-shaped triple.
+
+    The last rung of the listing demotion ladder (DESIGN.md section 12):
+    when every device backend has failed for a batch, each tile is listed
+    by the ``et_t=0`` bitset recursion -- which emits local cliques in the
+    same order as the device list kernels -- and packed into
+    ``(bufs, counts, overflow)`` exactly as a device harvest would return
+    them (local int32 indices, ``overflow == 0``).  Any downstream decode
+    path therefore produces rows byte-identical to a fault-free run.
+    """
+    per: List[np.ndarray] = []
+    for b in range(batch.B):
+        s = int(batch.sizes[b])
+        rows = _rows_from_packed(batch.A[b], s)
+        local: List[tuple] = []
+        list_rec_C(rows, (1 << s) - 1, l, (), local, et_t=0)
+        per.append(np.asarray(local, dtype=np.int32).reshape(-1, l))
+    cap = max(1, max((p.shape[0] for p in per), default=1))
+    bufs = np.zeros((batch.B, cap, l), dtype=np.int32)
+    counts = np.zeros(batch.B, dtype=np.int64)
+    for b, p in enumerate(per):
+        bufs[b, : p.shape[0]] = p
+        counts[b] = p.shape[0]
+    return bufs, counts, np.zeros(batch.B, dtype=np.uint32)
 
 
 def list_batch(

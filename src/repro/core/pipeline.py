@@ -49,6 +49,8 @@ from .graph import Graph, greedy_coloring, color_vertex_order, ragged_expand
 from .tiles import Tile
 from .truss import TrussDecomposition, truss_decomposition
 from ..obs import trace
+from ..resilience import inject
+from ..resilience import retry as fault_retry
 
 #: power-of-two tile-size bins; tiles wider than the last bin spill to host
 BINS = (32, 64, 128, 256)
@@ -343,33 +345,45 @@ def save_plan(plan: PipelinePlan, directory: str) -> str:
 
 
 def load_plan(directory: str) -> Optional[PipelinePlan]:
-    """Restore a :func:`save_plan` plan; None if absent/stale-format."""
+    """Restore a :func:`save_plan` plan; None if absent/stale-format.
+
+    Corrupt or truncated stores (failed length+digest check, unreadable
+    npz/meta, or a tree that no longer parses) also read as absent: the
+    bad step is quarantined -- moved aside under ``<dir>/quarantine/``
+    with a warning log -- so the caller rebuilds and re-saves instead of
+    propagating a deserialization traceback (the same fall-back-to-absent
+    contract as ``tune.records``).
+    """
     from ..checkpoint import store
 
-    got = store.restore_checkpoint(directory)
+    got = store.restore_checkpoint_safe(directory, _corrupt_site="plan.load")
     if got is None or got["metadata"].get("format") != PLAN_FORMAT:
         return None
-    flat = got["tree"]
-    g = Graph(n=int(flat["graph/n"]), edges=flat["graph/edges"],
-              indptr=flat["graph/indptr"], indices=flat["graph/indices"])
-    plan = PipelinePlan(g=g)
-    if "truss_dec/rank" in flat:
-        plan._td = TrussDecomposition(
-            order=flat["truss_dec/order"], rank=flat["truss_dec/rank"],
-            support0=flat["truss_dec/support0"],
-            peel_support=flat["truss_dec/peel_support"],
-            trussness=flat["truss_dec/trussness"],
-            tau=int(flat["truss_dec/tau"]))
-    if "colors" in flat:
-        plan._colors = flat["colors"]
-    for family in got["metadata"].get("families", []):
-        p = f"tables/{family}/"
-        plan._tables[family] = TileTable(
-            family, flat[p + "edge_id"], flat[p + "anchors"],
-            flat[p + "offsets"], flat[p + "verts"], flat[p + "thresh"],
-            flat[p + "ekeys"], flat.get(p + "erank"),
-            member_colors=flat.get(p + "member_colors"),
-            ncolors=flat.get(p + "ncolors"), rule1=flat.get(p + "rule1"))
+    try:
+        flat = got["tree"]
+        g = Graph(n=int(flat["graph/n"]), edges=flat["graph/edges"],
+                  indptr=flat["graph/indptr"], indices=flat["graph/indices"])
+        plan = PipelinePlan(g=g)
+        if "truss_dec/rank" in flat:
+            plan._td = TrussDecomposition(
+                order=flat["truss_dec/order"], rank=flat["truss_dec/rank"],
+                support0=flat["truss_dec/support0"],
+                peel_support=flat["truss_dec/peel_support"],
+                trussness=flat["truss_dec/trussness"],
+                tau=int(flat["truss_dec/tau"]))
+        if "colors" in flat:
+            plan._colors = flat["colors"]
+        for family in got["metadata"].get("families", []):
+            p = f"tables/{family}/"
+            plan._tables[family] = TileTable(
+                family, flat[p + "edge_id"], flat[p + "anchors"],
+                flat[p + "offsets"], flat[p + "verts"], flat[p + "thresh"],
+                flat[p + "ekeys"], flat.get(p + "erank"),
+                member_colors=flat.get(p + "member_colors"),
+                ncolors=flat.get(p + "ncolors"), rule1=flat.get(p + "rule1"))
+    except Exception as exc:
+        store.quarantine(directory, reason=f"plan parse failed: {exc!r}")
+        return None
     return plan
 
 
@@ -418,7 +432,11 @@ def cached_plan(g: Graph, order: str = "hybrid", *,
         return plan
     if cache_dir is not None:
         with trace.span("plan/load", order=order):
-            plan = load_plan(os.path.join(cache_dir, key))
+            try:
+                inject.fire("plan.load")
+                plan = load_plan(os.path.join(cache_dir, key))
+            except inject.FaultInjected:
+                plan = None  # injected load fault degrades to a cache miss
         if plan is not None and family in plan._tables:
             if stats is not None:
                 stats.plan_cache_hit = True
@@ -574,6 +592,9 @@ class TileBatch:
 
 def _pack_batch(g: Graph, table: TileTable, ids: np.ndarray, T: int,
                 mode: str) -> TileBatch:
+    # pure function of (table, ids): an injected pack fault is absorbed
+    # by in-place retry before any work happens, so results never change
+    fault_retry.consume("pack")
     D, V, sz, nedges, _ = _chunk_dense(g, table, ids, T)
     if mode == "hybrid":
         colors, perm = _greedy_color_chunk(D, sz)
@@ -701,6 +722,7 @@ def stream_batches(source: Union[Graph, PipelinePlan], k: int,
     plan = _as_plan(source)
     t0 = time.perf_counter()
     with trace.span("extract", order=order, k=k) as _sp:
+        fault_retry.consume("extract")  # pure stage: retry-in-place
         table = plan.table(order)
         ids = table.select(k, use_rule2=use_rule2)
         sizes = (table.offsets[ids + 1] - table.offsets[ids]).astype(np.int64)

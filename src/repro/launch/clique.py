@@ -113,6 +113,12 @@ def main():
                          "persistent compilation cache, so a repeated "
                          "invocation skips microbenchmarks AND XLA "
                          "compiles; also settable via REPRO_TUNE_CACHE")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="chaos mode: seeded fault-injection plan for "
+                         "repro.resilience (e.g. 'seed=7;*=0.1;"
+                         "kernel.launch=0.3'); results stay exact via "
+                         "retry/demotion; also settable via "
+                         "REPRO_FAULT_PLAN")
     ap.add_argument("--verify", action="store_true",
                     help="cross-check against the host engine")
     ap.add_argument("--log-level", default="warning", choices=list(LEVELS),
@@ -137,6 +143,11 @@ def main():
         print(f"metrics: {metrics_server.address}/metrics")
     if args.tune_cache:
         tune.configure(args.tune_cache)
+    if args.fault_plan:
+        from ..resilience import inject
+
+        inject.configure(args.fault_plan)
+        print(f"fault injection: {args.fault_plan}")
     g = load_graph(args.graph)
     log.info("loaded %s: n=%d m=%d", args.graph, g.n, g.m)
     print(f"graph: n={g.n} m={g.m}")

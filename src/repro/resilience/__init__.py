@@ -1,0 +1,29 @@
+"""Fault injection, retry/fallback, and graceful degradation.
+
+DESIGN.md section 12.  Three pieces:
+
+* :mod:`repro.resilience.inject` -- deterministic, seeded fault injection
+  with named sites threaded through the stack (off by default, no-op
+  fast path like ``obs.trace``).
+* :mod:`repro.resilience.retry` -- retry/backoff policies and the
+  backend demotion ladder used by ``runtime.dispatch``.
+* Typed failure exceptions re-exported here for callers.
+"""
+
+from .inject import ENV_FAULT_PLAN, SITES, FaultInjected, FaultPlan
+from .inject import configure as configure_faults
+from .inject import enabled as faults_enabled
+from .retry import DEFAULT_POLICY, RetryPolicy, backoff_delay, demote
+
+__all__ = [
+    "ENV_FAULT_PLAN",
+    "SITES",
+    "FaultInjected",
+    "FaultPlan",
+    "configure_faults",
+    "faults_enabled",
+    "DEFAULT_POLICY",
+    "RetryPolicy",
+    "backoff_delay",
+    "demote",
+]

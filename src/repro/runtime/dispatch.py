@@ -47,6 +47,8 @@ from ..core import engine_jax, pipeline
 from ..core.engine_np import Stats
 from ..obs import profile as obs_profile
 from ..obs import trace
+from ..resilience import inject
+from ..resilience import retry as fault_retry
 from .clique_scheduler import schedule_batches, tile_costs
 
 if hasattr(jax, "shard_map"):  # newer jax
@@ -261,6 +263,7 @@ class _InFlight:
     rows: int = 0  # un-padded batch rows (slice bound for routed harvest)
     route: object = None  # per-request delivery callback, or None
     T: int = 0  # tile width (profiling attribution)
+    batch: object = None  # host TileBatch, kept for resilient re-execution
 
 
 class Dispatcher:
@@ -291,6 +294,7 @@ class Dispatcher:
         max_inflight: int = 2,
         stats: Optional[Stats] = None,
         stage_times: Optional[dict] = None,
+        retry_policy: Optional[fault_retry.RetryPolicy] = None,
     ):
         from ..kernels import ops as kops
 
@@ -308,6 +312,11 @@ class Dispatcher:
         backend = kops.resolve_backend(backend, interpret)
         self.stats.backend = backend
         self.stage_times = stage_times
+        self.retry_policy = retry_policy or fault_retry.DEFAULT_POLICY
+        # kept for building demoted steps down the backend ladder
+        self._method = method
+        self._interpret = interpret
+        self._backend = backend
         self.total = 0
         self.tiles = 0
         self.placements: List[int] = []
@@ -331,18 +340,20 @@ class Dispatcher:
             self._step = _device_step(l, method, et, interpret, backend)
         self._loads = np.zeros(len(self.devices))
 
-    def _run_step(self, A, cand, device: int):
+    def _run_step(self, A, cand, device: int, step=None):
         """Invoke the jitted step; time the first call per
         (step, shape, device) signature into ``stats.kernel_compile_s``
         (compile + first run).  The seen-set is process-wide, matching the
         process-wide jit cache: a warm executable must neither block nor
-        re-bill its run time as compile on later dispatcher instances."""
-        sig = (id(self._step), A.shape, device)
+        re-bill its run time as compile on later dispatcher instances.
+        ``step`` overrides the baked-in step (demoted-backend retries)."""
+        step = self._step if step is None else step
+        sig = (id(step), A.shape, device)
         if sig in _COMPILED_STEPS:
-            return self._step(A, cand)
+            return step(A, cand)
         t0 = time.perf_counter()
         with trace.span("kernel/compile", sig=self._sig(A.shape[0], A.shape[1])):
-            out = jax.block_until_ready(self._step(A, cand))
+            out = jax.block_until_ready(step(A, cand))
         dt = time.perf_counter() - t0
         self.stats.kernel_compile_s += dt
         obs_profile.note_kernel(self._sig(A.shape[0], A.shape[1]), compile_s=dt)
@@ -360,6 +371,87 @@ class Dispatcher:
 
     def _account(self, per_device_tiles: np.ndarray, T: int) -> None:
         _account_devices(self.stats, per_device_tiles, T)
+
+    def _note_retry(self, attempt: int, exc: BaseException) -> None:
+        """Per-batch attempt accounting hook (``retry.call`` on_retry)."""
+        self.stats.retries += 1
+        trace.instant("resilience/retry", attempt=attempt,
+                      error=type(exc).__name__)
+
+    def _launch_on(self, batch: pipeline.TileBatch, d: int,
+                   backend: Optional[str]):
+        """Stage ``batch`` on device ``d`` and launch one count step.
+
+        ``backend=None`` uses the dispatcher's baked-in step; a backend
+        name builds (and jit-caches) the demoted step for that rung.
+        Fires the ``device.stage`` and ``kernel.launch`` fault sites.
+        """
+        if backend is None and self.mesh is None:
+            step = None
+        else:
+            step = _device_step(self.l, self._method, self.et,
+                                self._interpret, backend or self._backend)
+        inject.fire("device.stage")
+        # batch-shape bucketing: ragged tail chunks pad to pow2 and reuse
+        # the full chunks' executables (padding counts 0)
+        A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
+        cand = jax.device_put(engine_jax.bucket_rows(batch.cand),
+                              self.devices[d])
+        inject.fire("kernel.launch")
+        return self._run_step(A, cand, d, step=step)
+
+    def _launch(self, batch: pipeline.TileBatch, d: int, *,
+                block: bool = False):
+        """Launch with retry, then demotion down the backend ladder.
+
+        Each rung (the resolved backend, then its ``fault_retry.demote``
+        successors: pallas -> lax -> ref) is retried under
+        ``retry_policy``; an exhausted ladder falls back to the host
+        recursion (:meth:`_host_partials`), which cannot fail.  Every
+        rung returns exact partials, so retried and demoted batches stay
+        byte-identical to a fault-free run.  ``block=True`` additionally
+        waits for the result (harvest-side recovery re-entering the same
+        FIFO slot).
+        """
+        backend = None  # None = the dispatcher's resolved backend
+        while True:
+            try:
+                out = fault_retry.call(
+                    lambda b=backend: self._launch_on(batch, d, b),
+                    policy=self.retry_policy, retry_on=(Exception,),
+                    token="count.launch", on_retry=self._note_retry)
+                if block:
+                    jax.block_until_ready(out)
+                return out
+            except Exception as exc:
+                self.stats.demotions += 1
+                nxt = fault_retry.demote(
+                    "count", backend if backend is not None else self._backend)
+                trace.instant("resilience/demote", frm=backend or self._backend,
+                              to=nxt or "host", error=type(exc).__name__)
+                if nxt is None:
+                    return self._host_partials(batch)
+                backend = nxt
+
+    def _host_partials(self, batch: pipeline.TileBatch):
+        """Count ``batch`` on the host recursion (the ladder's last rung).
+
+        Returns numpy ``(hard, nv, t, f)`` partials that
+        ``engine_jax.combine_counts`` finishes to the exact same totals
+        as a device step: ``hard`` carries the true per-tile count and
+        ``t`` is pinned above the 2-plex threshold, so the
+        early-termination closed form adds nothing.
+        """
+        from ..core import listing
+        from ..core.engine_np import count_rec_C
+
+        hard = np.zeros(batch.B, dtype=np.int64)
+        for b in range(batch.B):
+            s = int(batch.sizes[b])
+            rows = listing._rows_from_packed(batch.A[b], s)
+            hard[b] = count_rec_C(rows, (1 << s) - 1, self.l, self.stats)
+        zeros = np.zeros(batch.B, dtype=np.int64)
+        return hard, zeros, np.full(batch.B, 3, dtype=np.int64), zeros
 
     def submit(
         self,
@@ -386,14 +478,34 @@ class Dispatcher:
         Thread safety: all ``submit``/``drain``/``finish`` calls must come
         from one thread; only the ``route`` callbacks themselves may hand
         work to other threads.
+
+        Resilience: a failed stage/launch is retried under
+        ``retry_policy``, then demoted down the backend ladder
+        (:meth:`_launch`); the batch keeps its FIFO position either way.
         """
         with trace.span("device/stage", B=batch.B, T=batch.T):
             if self.mesh is not None:
                 d = -1
-                A = _pad_rows(batch.A, self._n_shards)
-                cand = _pad_rows(batch.cand, self._n_shards)
-                A, cand = jax.device_put((A, cand), self._in_shardings)
-                shard_rows = A.shape[0] // self._n_shards
+
+                def launch_mesh():
+                    inject.fire("device.stage")
+                    A = _pad_rows(batch.A, self._n_shards)
+                    cand = _pad_rows(batch.cand, self._n_shards)
+                    A, cand = jax.device_put((A, cand), self._in_shardings)
+                    inject.fire("kernel.launch")
+                    return A.shape[0], self._run_step(A, cand, d)
+
+                try:
+                    padded, out = fault_retry.call(
+                        launch_mesh, policy=self.retry_policy,
+                        retry_on=(Exception,), token="count.mesh",
+                        on_retry=self._note_retry)
+                except Exception:
+                    # the SPMD step has no per-device ladder; fall straight
+                    # back to the (exact) host recursion
+                    self.stats.demotions += 1
+                    padded, out = batch.B, self._host_partials(batch)
+                shard_rows = max(1, padded // self._n_shards)
                 per_dev = np.bincount(
                     np.minimum(np.arange(batch.B) // shard_rows, self._n_shards - 1),
                     minlength=self._n_shards,
@@ -402,22 +514,16 @@ class Dispatcher:
                 d = int(np.argmin(self._loads)) if device is None else int(device)
                 cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
                 self._loads[d] += cost
-                # batch-shape bucketing: ragged tail chunks pad to pow2 and
-                # reuse the full chunks' executables (padding counts 0)
-                A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
-                cand = jax.device_put(
-                    engine_jax.bucket_rows(batch.cand), self.devices[d]
-                )
+                out = self._launch(batch, d)
                 per_dev = np.zeros(self.n_devices, dtype=np.int64)
                 per_dev[d] = batch.B
-            out = self._run_step(A, cand, d)
         self.placements.append(d)
         self.tiles += batch.B
         self._account(per_dev, batch.T)
         if not self._inflight:
             # in-flight window (re)opens now; overlap accrues from here
             self._overlap_mark = time.perf_counter()
-        self._inflight.append(_InFlight(d, out, batch.B, route, batch.T))
+        self._inflight.append(_InFlight(d, out, batch.B, route, batch.T, batch))
         if not self.async_staging:
             self._drain()
         else:
@@ -446,7 +552,18 @@ class Dispatcher:
             flops=batch_flops(rows, p.T),
             bytes=batch_bytes(rows, p.T),
         ):
-            jax.block_until_ready(p.out)
+            # injected harvest faults are pure (the device result still
+            # exists) and absorbed in place; a REAL wait failure means the
+            # staged result is lost -- recompute the same batch
+            # synchronously in its FIFO slot, so totals and routed
+            # partials are unchanged
+            fault_retry.consume("device.harvest", on_retry=self._note_retry)
+            try:
+                jax.block_until_ready(p.out)
+            except Exception as exc:
+                self._note_retry(1, exc)
+                p.out = self._launch(p.batch, max(p.device, 0), block=True)
+                B = int(p.out[0].shape[0])
         t1 = time.perf_counter()
         obs_profile.note_kernel(
             self._sig(B, p.T),
@@ -591,6 +708,7 @@ class ListDispatcher:
         async_staging: bool = True,
         max_inflight: int = 2,
         stage_times: Optional[dict] = None,
+        retry_policy: Optional[fault_retry.RetryPolicy] = None,
     ):
         from ..core import listing
         from ..kernels import ops as kops
@@ -619,6 +737,7 @@ class ListDispatcher:
         self.et_t = et_t
         self.interpret = interpret
         self.backend = backend
+        self.retry_policy = retry_policy or fault_retry.DEFAULT_POLICY
         self.async_staging = async_staging
         self.max_inflight = max(1, int(max_inflight))
         self.stage_times = stage_times
@@ -656,6 +775,88 @@ class ListDispatcher:
         """Number of devices this dispatcher places batches on."""
         return len(self.devices)
 
+    def _note_retry(self, attempt: int, exc: BaseException) -> None:
+        """Per-batch attempt accounting (submit thread + decode worker)."""
+        with self._acct_lock:
+            self.stats.retries += 1
+        trace.instant("resilience/retry", attempt=attempt,
+                      error=type(exc).__name__)
+
+    def _note_demotion(self, frm: Optional[str], to: Optional[str]) -> None:
+        """Count one rung of the backend ladder in Stats/trace."""
+        with self._acct_lock:
+            self.stats.demotions += 1
+        trace.instant("resilience/demote", frm=frm or self.backend,
+                      to=to or "host")
+
+    def _stage(self, batch: pipeline.TileBatch, d: int):
+        """Fire the stage site and device_put the bucketing-padded batch.
+
+        The padded zero-candidate lanes are sliced off again in the
+        decode job (padding rows count 0 and never overflow).
+        """
+        inject.fire("device.stage")
+        A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
+        cand = jax.device_put(engine_jax.bucket_rows(batch.cand),
+                              self.devices[d])
+        return A, cand
+
+    def _count_pass(self, A, cand):
+        """Fire the launch site and start the async sizing count pass."""
+        inject.fire("kernel.launch")
+        return self._count_step(A, cand)[0]
+
+    def _list_once(self, A, cand, cap: int, backend: str):
+        """Fire the launch site and start one list kernel."""
+        from ..kernels import ops as kops
+
+        inject.fire("kernel.launch")
+        return kops.list_tiles(A, cand, self.l, capacity=cap,
+                               backend=backend, interpret=self.interpret)
+
+    def _launch_list(self, batch: pipeline.TileBatch, A, cand, cap: int):
+        """Launch one list kernel with retry, then backend demotion.
+
+        Rungs: the resolved backend, then its ``fault_retry.demote``
+        successor (pallas -> lax; ``ref`` implements counting only).  An
+        exhausted ladder falls back to ``listing.host_list_triple`` --
+        the host recursion in kernel emission order -- so the returned
+        triple decodes byte-identically no matter which rung served it.
+        """
+        from ..core import listing
+
+        backend = self.backend
+        while True:
+            try:
+                return fault_retry.call(
+                    lambda b=backend: self._list_once(A, cand, cap, b),
+                    policy=self.retry_policy, retry_on=(Exception,),
+                    token="list.launch", on_retry=self._note_retry)
+            except Exception:
+                nxt = fault_retry.demote("list", backend)
+                self._note_demotion(backend, nxt)
+                if nxt is None:
+                    return listing.host_list_triple(batch, self.l)
+                backend = nxt
+
+    def _relaunch_sync(self, batch: pipeline.TileBatch, cap: int):
+        """Harvest-side recovery: re-stage and re-list a lost batch.
+
+        Returns a triple (device or host) for the same FIFO slot; never
+        raises -- a dead device falls through to the host recursion.
+        """
+        try:
+            A = jax.device_put(engine_jax.bucket_rows(batch.A),
+                               self.devices[0])
+            cand = jax.device_put(engine_jax.bucket_rows(batch.cand),
+                                  self.devices[0])
+        except Exception:
+            from ..core import listing
+
+            self._note_demotion(self.backend, None)
+            return listing.host_list_triple(batch, self.l)
+        return self._launch_list(batch, A, cand, cap)
+
     def submit(
         self,
         batch: pipeline.TileBatch,
@@ -682,8 +883,14 @@ class ListDispatcher:
 
         Thread safety: all ``submit``/``drain``/``finish`` calls must
         come from one thread; routes run on the decode worker thread.
+
+        Resilience: staging and launches are retried under
+        ``retry_policy`` and demoted down the listing backend ladder
+        (pallas -> lax -> ``listing.host_list_triple``); a batch keeps
+        its FIFO queue position whichever rung serves it, so the decoded
+        row stream is byte-identical to a fault-free run.
         """
-        from ..kernels import ops as kops
+        from ..core import listing
 
         if route is None and self.sink is None:
             raise ValueError("emit mode requires a CliqueSink (or per-"
@@ -692,21 +899,35 @@ class ListDispatcher:
             d = int(np.argmin(self._loads)) if device is None else int(device)
             cost = float(tile_costs(batch.sizes, batch.nedges, self.l).sum())
             self._loads[d] += cost
-            # batch-shape bucketing, as in Dispatcher.submit; the padded
-            # zero-candidate lanes are sliced off again in the decode job
-            A = jax.device_put(engine_jax.bucket_rows(batch.A), self.devices[d])
-            cand = jax.device_put(
-                engine_jax.bucket_rows(batch.cand), self.devices[d]
-            )
             self.placements.append(d)
             self.tiles += batch.B
             per_dev = np.zeros(self.n_devices, dtype=np.int64)
             per_dev[d] = batch.B
             with self._acct_lock:
                 _account_devices(self.stats, per_dev, batch.T)
-            if self.capacity is None or self.capacity == "sized":
-                # async count pass; readiness is probed at promotion time
-                hard = self._count_step(A, cand)[0]
+            try:
+                A, cand = fault_retry.call(
+                    lambda: self._stage(batch, d), policy=self.retry_policy,
+                    retry_on=(Exception,), token="list.stage",
+                    on_retry=self._note_retry)
+            except Exception:
+                A = cand = None
+                self._note_demotion(self.backend, None)
+            sized = self.capacity is None or self.capacity == "sized"
+            if sized:
+                hard = None
+                if A is not None:
+                    try:
+                        # async count pass; readiness is probed at
+                        # promotion time
+                        hard = fault_retry.call(
+                            lambda: self._count_pass(A, cand),
+                            policy=self.retry_policy, retry_on=(Exception,),
+                            token="list.sizing", on_retry=self._note_retry)
+                    except Exception:
+                        # sizing rung dead: the whole batch is listed on
+                        # the host at promotion time (keeps FIFO order)
+                        self._note_demotion(self.backend, None)
                 self._pending.append((d, batch, (A, cand, hard), route))
             else:
                 if self.capacity == "speculative":  # ratchet guess
@@ -714,10 +935,10 @@ class ListDispatcher:
                               self.max_capacity)
                 else:
                     cap = max(1, int(self.capacity))
-                out = kops.list_tiles(
-                    A, cand, self.l, capacity=cap,
-                    backend=self.backend, interpret=self.interpret,
-                )
+                if A is None:
+                    out = listing.host_list_triple(batch, self.l)
+                else:
+                    out = self._launch_list(batch, A, cand, cap)
                 self._inflight.append((d, batch, (A, cand), out, route))
         self._promote(block=False)
         if not self.async_staging:
@@ -739,33 +960,42 @@ class ListDispatcher:
         through (used when the harvest side runs dry).
         """
         from ..core import listing
-        from ..kernels import ops as kops
 
         while self._pending:
             d, batch, (A, cand, hard), route = self._pending[0]
+            if hard is None:
+                # sizing (or staging) already exhausted its ladder in
+                # submit: list the batch on the host, keeping FIFO order
+                self._pending.popleft()
+                out = listing.host_list_triple(batch, self.l)
+                self._inflight.append((d, batch, (A, cand), out, route))
+                block = False
+                continue
             if not block and not _is_ready(hard):
                 break
             t0 = time.perf_counter()
+            counts = None
             with trace.span("device/sizing", B=batch.B, T=batch.T):
-                counts = np.asarray(hard)  # blocks only until THIS batch
+                try:
+                    counts = np.asarray(hard)  # blocks only until THIS batch
+                except Exception as exc:
+                    # count pass lost in flight: host-list the whole batch
+                    self._note_retry(1, exc)
+                    self._note_demotion(self.backend, None)
             if self.stage_times is not None:
                 with self._acct_lock:
                     self.stage_times["device"] = (
                         self.stage_times.get("device", 0.0)
                         + time.perf_counter() - t0
                     )
-            cap = listing.capacity_for(
-                counts, self.max_capacity, policy=self.cap_policy
-            )
             self._pending.popleft()
-            out = kops.list_tiles(
-                A,
-                cand,
-                self.l,
-                capacity=cap,
-                backend=self.backend,
-                interpret=self.interpret,
-            )
+            if counts is None:
+                out = listing.host_list_triple(batch, self.l)
+            else:
+                cap = listing.capacity_for(
+                    counts, self.max_capacity, policy=self.cap_policy
+                )
+                out = self._launch_list(batch, A, cand, cap)
             self._inflight.append((d, batch, (A, cand), out, route))
             block = False  # only the head is ever forced
 
@@ -778,23 +1008,42 @@ class ListDispatcher:
         batches -- hands the sliced triple to the owning request's
         ``route``.  Only this thread ever touches the sink or
         ``emitted_cliques`` / ``overflowed_tiles``, so FIFO submission ==
-        deterministic sink order with no further synchronization."""
+        deterministic sink order with no further synchronization.
+
+        Resilience: injected harvest faults are absorbed in place; a real
+        fetch failure (the triple was lost after launch) re-lists the
+        same batch synchronously in its FIFO slot, demoting down the
+        ladder to the kernel-order host recursion if needed -- so the
+        decoded rows never change."""
         from ..core import listing
-        from ..kernels import ops as kops
 
         t0 = time.perf_counter()
         sig = (f"list[l={self.l},T={batch.T},B={batch.B},"
                f"backend={self.backend}]")
         # slice off the bucketing padding (zero-candidate lanes) before
         # ratchet/decode -- padding rows count 0 and never overflow
+        relaunched = False
         with trace.span(
             "device/wait",
             sig=sig,
             flops=batch_flops(batch.B, batch.T),
             bytes=batch_bytes(batch.B, batch.T),
         ):
-            bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out)
-        if self.capacity == "speculative":
+            fault_retry.consume("device.harvest", on_retry=self._note_retry)
+            try:
+                bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out)
+            except Exception as exc:
+                self._note_retry(1, exc)
+                relaunched = True
+                cap = min(self._cap_ratchet.get(batch.T, SPECULATIVE_CAP0),
+                          self.max_capacity)
+                out2 = self._relaunch_sync(batch, cap)
+                try:
+                    bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out2)
+                except Exception:
+                    self._note_demotion(self.backend, None)
+                    bufs, cnt, ovf = listing.host_list_triple(batch, self.l)
+        if self.capacity == "speculative" or relaunched:
             # the kernel reported true counts, so a too-small guess is
             # retried once on the device at the exact rounded size --
             # identical triples, never a host re-list unless the true
@@ -809,11 +1058,20 @@ class ListDispatcher:
                 A, cand = acand
                 with trace.span("device/relist", B=batch.B, T=batch.T,
                                 capacity=true_cap):
-                    out2 = kops.list_tiles(
-                        A, cand, self.l, capacity=true_cap,
-                        backend=self.backend, interpret=self.interpret,
-                    )
-                    bufs, cnt, ovf = (np.asarray(x)[: batch.B] for x in out2)
+                    if relaunched:
+                        out2 = self._relaunch_sync(batch, true_cap)
+                    else:
+                        out2 = self._launch_list(batch, A, cand, true_cap)
+                    try:
+                        bufs, cnt, ovf = (
+                            np.asarray(x)[: batch.B] for x in out2
+                        )
+                    except Exception as exc:
+                        self._note_retry(1, exc)
+                        self._note_demotion(self.backend, None)
+                        bufs, cnt, ovf = listing.host_list_triple(
+                            batch, self.l
+                        )
                 with self._acct_lock:
                     self.stats.emit_retries += 1
         t1 = time.perf_counter()
@@ -824,6 +1082,7 @@ class ListDispatcher:
             flops=batch_flops(batch.B, batch.T),
             nbytes=batch_bytes(batch.B, batch.T),
         )
+        fault_retry.consume("decode", on_retry=self._note_retry)
         with trace.span("decode", B=batch.B, T=batch.T,
                         routed=route is not None):
             if route is not None:
@@ -832,6 +1091,7 @@ class ListDispatcher:
                 arr = listing.decode_batch(
                     batch, bufs, cnt, ovf, self.l, self.stats, et_t=self.et_t
                 )
+                fault_retry.consume("sink.write", on_retry=self._note_retry)
                 emitted = self.sink.emit(arr)
         t2 = time.perf_counter()
         with self._acct_lock:
@@ -846,6 +1106,7 @@ class ListDispatcher:
         worker, keeping their FIFO position relative to batch decodes."""
 
         def job() -> None:
+            fault_retry.consume("sink.write", on_retry=self._note_retry)
             emitted = self.sink.emit(arr)
             with self._acct_lock:
                 self.stats.emitted_cliques += emitted
@@ -920,8 +1181,26 @@ class ListDispatcher:
         """Best-effort teardown for error paths: cancel queued decode
         jobs and stop the worker WITHOUT draining devices, so the sink
         stops receiving rows once the caller is handling a failure.
-        Idempotent; a no-op after a clean :meth:`finish`."""
+
+        Queued (never-started) jobs are cancelled, but the one decode job
+        the single worker may be running is drained to its row boundary:
+        ``shutdown(cancel_futures=True)`` alone would return while that
+        job is mid-``sink.emit``, letting the caller tear the sink down
+        under a concurrent write (torn row).  Draining the future deque
+        is the barrier -- cancelled futures resolve instantly, the
+        running one completes its emit first.  Idempotent; a no-op after
+        a clean :meth:`finish`."""
         self._decode_ex.shutdown(wait=False, cancel_futures=True)
+        while self._decoding:
+            fut = self._decoding.popleft()
+            try:
+                fut.result()
+            except concurrent.futures.CancelledError:
+                continue
+            except Exception:
+                # error-path teardown: the primary failure is already
+                # being handled by the caller
+                pass
 
 
 def dispatch_scheduled(

@@ -8,6 +8,7 @@ clique rows back to per-request sinks under EDF/LPT scheduling.
 
 from .request import (
     ET_T,
+    DeadlineExceeded,
     Request,
     RequestQueue,
     RequestResult,
@@ -23,6 +24,7 @@ __all__ = [
     "ET_T",
     "BatchScheduler",
     "CliqueService",
+    "DeadlineExceeded",
     "Request",
     "RequestQueue",
     "RequestResult",

@@ -31,6 +31,7 @@ import numpy as np
 from ..core import listing
 from ..core.engine_np import Stats
 from ..obs import trace
+from ..resilience import retry as fault_retry
 
 #: process-wide ticket-id source; the id keys the request's async span
 #: tree in exported traces and is stable for the request's lifetime
@@ -47,6 +48,27 @@ class ServiceOverloaded(RuntimeError):
 
 class ServiceClosed(RuntimeError):
     """Submitted to (or queued on) a service that has been closed."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A deadline-*enforced* request was cancelled at its deadline.
+
+    Raised out of :meth:`Ticket.result` for requests submitted with
+    ``enforce_deadline=True`` whose deadline expired before completion.
+    Carries whatever had already been delivered in pull order:
+    ``partial_rows`` (listing mode with the default in-memory sink; None
+    otherwise), ``emitted`` (rows the sink accepted), and
+    ``partial_count`` (count mode's running sum).  Requests *without*
+    enforcement keep the accounting-only contract (late but exact,
+    ``deadline_missed=True``).
+    """
+
+    def __init__(self, msg: str, *, partial_rows=None, emitted: int = 0,
+                 partial_count: Optional[int] = None) -> None:
+        super().__init__(msg)
+        self.partial_rows = partial_rows
+        self.emitted = emitted
+        self.partial_count = partial_count
 
 
 def apply_vertex_filter(rows: np.ndarray, vertex: int) -> np.ndarray:
@@ -100,6 +122,9 @@ class Request:
     ``sink`` (default: an in-memory ``ArraySink`` honoring ``max_out``)
     after ``vertex_filter`` (keep rows containing that vertex) is
     applied; ``max_out`` truncation happens *after* filtering.
+    ``enforce_deadline=True`` arms cooperative cancellation: the
+    scheduler stops feeding the request at ``deadline_s`` and resolves it
+    with :class:`DeadlineExceeded` instead of finishing late.
     """
 
     def __init__(
@@ -113,6 +138,7 @@ class Request:
         vertex_filter: Optional[int] = None,
         max_out: Optional[int] = None,
         deadline_s: Optional[float] = None,
+        enforce_deadline: bool = False,
         sink: Optional[listing.CliqueSink] = None,
     ) -> None:
         if mode not in ("count", "list"):
@@ -125,6 +151,8 @@ class Request:
             raise ValueError("k must be >= 1")
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError("deadline_s must be positive")
+        if enforce_deadline and deadline_s is None:
+            raise ValueError("enforce_deadline requires deadline_s")
         self.g = g
         self.k = int(k)
         self.l = self.k - 2
@@ -134,6 +162,7 @@ class Request:
         self.vertex_filter = vertex_filter
         self.max_out = max_out
         self.deadline_s = deadline_s
+        self.enforce_deadline = bool(enforce_deadline)
         self.stats = Stats()
         self.rid = next(_RID)  # ticket id; keys the request's trace tree
         self.stage_s: Dict[str, float] = {}
@@ -157,6 +186,7 @@ class Request:
         self._result: Optional[RequestResult] = None
         self._error: Optional[BaseException] = None
         self._on_done = None  # service hook, set at admission
+        self._on_isolated = None  # scheduler hook: count contained failures
 
     # -- scheduler-side API -------------------------------------------------
 
@@ -200,6 +230,8 @@ class Request:
         no matter which fused batch finished first.
         """
         with self._lock:
+            if self._event.is_set():
+                return  # already resolved (failed/cancelled): drop late work
             if self.mode == "count":
                 self._count += int(payload)
                 self._delivered += 1
@@ -218,7 +250,16 @@ class Request:
                     )
                     self._release_next += 1
                     self._delivered += 1
-                    self._emit_locked(rows)
+                    try:
+                        self._emit_locked(rows)
+                    except Exception as exc:
+                        # a raising sink fails only this request -- the
+                        # scheduler and every other in-flight request
+                        # keep running (per-request isolation)
+                        self._fail_locked(exc)
+                        if self._on_isolated is not None:
+                            self._on_isolated(self, exc)
+                        return
             self._maybe_resolve_locked()
 
     def finish_feeding(self) -> None:
@@ -230,15 +271,49 @@ class Request:
     def fail(self, exc: BaseException) -> None:
         """Resolve the request exceptionally (admission/scheduler error)."""
         with self._lock:
+            self._fail_locked(exc)
+
+    def cancel_deadline(self, now: Optional[float] = None) -> bool:
+        """Cancel a deadline-enforced request that blew its deadline.
+
+        Called by the scheduler once ``deadline_t`` has passed for a
+        request with ``enforce_deadline=True``.  Resolves the ticket with
+        :class:`DeadlineExceeded` carrying whatever was already released
+        in pull order (partial rows / running count).  Returns False when
+        the request had already resolved (benign race with completion).
+        """
+        with self._lock:
             if self._event.is_set():
-                return
-            self._error = exc
-            trace.async_end("request", id=self.rid, error=repr(exc))
-            self._event.set()
+                return False
+            partial = None
+            emitted = 0
+            pcount = None
+            if self.mode == "count":
+                pcount = self._count
+            elif self._sink is not None:
+                try:
+                    self._sink.close()
+                except Exception:
+                    pass  # a failing sink must not block cancellation
+                emitted = self._sink.accepted
+                if not self._external_sink:
+                    partial = self._sink.result()
+            self._fail_locked(DeadlineExceeded(
+                f"deadline {self.deadline_s}s exceeded",
+                partial_rows=partial, emitted=emitted, partial_count=pcount))
+            return True
 
     # -- internals ----------------------------------------------------------
 
+    def _fail_locked(self, exc: BaseException) -> None:
+        if self._event.is_set():
+            return
+        self._error = exc
+        trace.async_end("request", id=self.rid, error=repr(exc))
+        self._event.set()
+
     def _emit_locked(self, rows: np.ndarray) -> None:
+        fault_retry.consume("sink.write")  # chaos site: delivery-side emit
         if self.vertex_filter is not None:
             rows = apply_vertex_filter(rows, self.vertex_filter)
         accepted = self._sink.emit(rows)
@@ -287,8 +362,11 @@ class Ticket:
     """Client-side handle of a submitted request (future-like).
 
     Returned by :meth:`CliqueService.submit`; safe to wait on from any
-    thread.  Deadlines never cancel work -- a late request resolves with
-    ``deadline_missed=True`` and exact results.
+    thread.  By default deadlines never cancel work -- a late request
+    resolves with ``deadline_missed=True`` and exact results.  With
+    ``enforce_deadline=True`` an expired request instead resolves with
+    :class:`DeadlineExceeded` (carrying any partial results) while the
+    service keeps serving everyone else.
     """
 
     def __init__(self, request: Request) -> None:

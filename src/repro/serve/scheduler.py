@@ -43,7 +43,7 @@ from ..core import tiles as tiles_mod
 from ..core.engine_np import Stats
 from ..obs import trace
 from ..runtime.dispatch import Dispatcher, ListDispatcher, resolve_devices
-from .request import ET_T, Request
+from .request import ET_T, Request, ServiceOverloaded
 
 
 @dataclasses.dataclass
@@ -54,6 +54,12 @@ class ServeStats:
     chunks from more than one request -- the direct evidence that
     continuous batching is happening; ``deadline_flushes`` counts fuse
     buffers flushed early because an owner's deadline drew near.
+
+    Resilience counters: ``isolated_failures`` is requests resolved
+    exceptionally while the service kept serving everyone else,
+    ``deadline_cancels`` is deadline-*enforced* requests cooperatively
+    cancelled at expiry, and ``shed`` is admissions rejected by the
+    projected-deadline-miss load shedder.
     """
 
     admitted: int = 0
@@ -66,12 +72,16 @@ class ServeStats:
     fused_chunks: int = 0
     deadline_flushes: int = 0
     spill_tiles: int = 0
+    isolated_failures: int = 0
+    deadline_cancels: int = 0
+    shed: int = 0
 
     # every field is a monotonic total (repro.obs.metrics publication)
     _METRIC_KINDS = {f: "sum" for f in (
         "admitted", "rejected", "completed", "deadline_missed",
         "fused_batches", "cross_request_batches", "fused_rows",
         "fused_chunks", "deadline_flushes", "spill_tiles",
+        "isolated_failures", "deadline_cancels", "shed",
     )}
 
 
@@ -179,6 +189,7 @@ class BatchScheduler:
         plan_cache_dir: Optional[str] = None,
         async_staging: bool = True,
         max_inflight: int = 2,
+        shed_on_projected_miss: bool = False,
         stats: Optional[ServeStats] = None,
         engine_stats: Optional[Stats] = None,
     ) -> None:
@@ -199,6 +210,7 @@ class BatchScheduler:
         self.plan_cache_dir = plan_cache_dir
         self.async_staging = async_staging
         self.max_inflight = max_inflight
+        self.shed_on_projected_miss = bool(shed_on_projected_miss)
         self.stats = stats if stats is not None else ServeStats()
         self.engine_stats = engine_stats if engine_stats is not None \
             else Stats()
@@ -208,6 +220,10 @@ class BatchScheduler:
         self._cdisps: Dict[int, Dispatcher] = {}
         self._ldisps: Dict[int, ListDispatcher] = {}
         self._arrivals = 0
+        # load-shedding throughput estimate: tiles pulled so far and the
+        # monotonic time of the first pull (rate = tiles / elapsed)
+        self._done_tiles = 0
+        self._work_t0: Optional[float] = None
 
     # -- dispatcher pools ---------------------------------------------------
 
@@ -247,6 +263,11 @@ class BatchScheduler:
         The plan lookup is the only potentially heavy admission work
         (O(delta*m) on a cold graph); warm graphs hit the keyed plan
         cache and admission is O(selected tiles) index work.
+
+        With ``shed_on_projected_miss`` enabled, a deadline-bearing
+        request whose projected completion (backlog / observed tile
+        throughput) already exceeds its deadline is rejected here with
+        :class:`ServiceOverloaded` instead of admitted-to-miss.
         """
         req.mark_admitted()
         with trace.span("serve/admit", rid=req.rid, k=req.k, mode=req.mode):
@@ -255,6 +276,8 @@ class BatchScheduler:
                 stats=req.stats)
             table = plan.table(req.order)
             ids = table.select(req.k, use_rule2=req.use_rule2)
+        self._maybe_shed(req, int(ids.size))
+        req._on_isolated = self._count_isolated
         stream = pipeline.stream_batches(
             plan, req.k, order=req.order, use_rule2=req.use_rule2,
             batch_size=self.chunk_tiles, pack_workers=0, stats=req.stats)
@@ -263,6 +286,81 @@ class BatchScheduler:
         self._arrivals += 1
 
     # -- scheduling ---------------------------------------------------------
+
+    def _maybe_shed(self, req: Request, new_tiles: int) -> None:
+        """Reject a deadline-bearing request projected to miss (knob-gated).
+
+        Uses the scheduler's own cost model: observed tile throughput
+        (pulled tiles / elapsed) against the backlog (active remaining
+        tiles + this request's selected tiles).  Conservative by design:
+        sheds only once enough tiles have been pulled to trust the rate.
+        """
+        if not self.shed_on_projected_miss or req.deadline_t is None:
+            return
+        if self._work_t0 is None or self._done_tiles < self.fuse_rows:
+            return  # no trustworthy throughput estimate yet
+        elapsed = time.monotonic() - self._work_t0
+        if elapsed <= 0:
+            return
+        rate = self._done_tiles / elapsed  # tiles per second
+        backlog = sum(a.remaining for a in self._active) + new_tiles
+        projected = time.monotonic() + backlog / max(rate, 1e-9)
+        if projected > req.deadline_t:
+            with self.stats_lock:
+                self.stats.shed += 1
+                self.stats.rejected += 1
+            trace.instant("serve/shed", rid=req.rid,
+                          backlog=backlog, rate=round(rate, 1))
+            raise ServiceOverloaded(
+                f"projected completion {projected - req.deadline_t:.3f}s "
+                f"past deadline (backlog {backlog} tiles at "
+                f"{rate:.0f} tiles/s): request shed at admission")
+
+    def _isolate(self, a: _ActiveStream, exc: BaseException) -> None:
+        """Fail one active request in place; the scheduler keeps running."""
+        try:
+            a.stream.close()
+        except Exception:
+            pass
+        if a in self._active:
+            self._active.remove(a)
+        self._note_isolated(a.req, exc)
+
+    def _note_isolated(self, req: Request, exc: BaseException) -> None:
+        req.fail(exc)
+        self._count_isolated(req, exc)
+
+    def _count_isolated(self, req: Request, exc: BaseException) -> None:
+        with self.stats_lock:
+            self.stats.isolated_failures += 1
+        trace.instant("serve/isolate", rid=req.rid, error=repr(exc))
+
+    def _cancel_expired(self, now: Optional[float] = None) -> None:
+        """Cooperatively cancel deadline-enforced requests past expiry.
+
+        The stream is closed (no further pulls), the request leaves the
+        active set, and its ticket resolves with
+        :class:`~repro.serve.request.DeadlineExceeded` carrying partial
+        results.  In-flight fused chunks it still owns are dropped by the
+        sequencer's resolved-request guard.
+        """
+        if now is None:
+            now = time.monotonic()
+        for a in list(self._active):
+            req = a.req
+            if not req.enforce_deadline or req.deadline_t is None:
+                continue
+            if now < req.deadline_t:
+                continue
+            try:
+                a.stream.close()
+            except Exception:
+                pass
+            self._active.remove(a)
+            if req.cancel_deadline(now):
+                with self.stats_lock:
+                    self.stats.deadline_cancels += 1
+                trace.instant("serve/deadline_cancel", rid=req.rid)
 
     def _finish_stream(self, a: _ActiveStream) -> None:
         a.stream.close()
@@ -287,7 +385,13 @@ class BatchScheduler:
         delivered immediately (through the owner's sequencer, so order
         holds); packed chunks accumulate in fuse buffers, flushed at
         ``fuse_rows`` or under deadline pressure.
+
+        Failure containment: an exception out of one request's tile
+        stream or spill compute isolates *that* request (its ticket
+        resolves exceptionally) and scheduling continues -- one bad
+        request never takes down its cotenants.
         """
+        self._cancel_expired(now)
         self._flush_expiring(now)
         a = self._pick()
         if a is None:
@@ -298,24 +402,35 @@ class BatchScheduler:
         except StopIteration:
             self._finish_stream(a)
             return True
+        except Exception as exc:  # per-request containment (stream died)
+            self._isolate(a, exc)
+            return True
+        if self._work_t0 is None:
+            self._work_t0 = time.monotonic()
         seq = req.next_seq()
         if isinstance(item, tiles_mod.Tile):
             a.remaining -= 1
+            self._done_tiles += 1
             with self.stats_lock:
                 self.stats.spill_tiles += 1
             t0 = time.monotonic()
-            if req.mode == "count":
-                with trace.span("spill/count", s=item.s, rid=req.rid):
-                    payload = engine_jax.count_spilled(
-                        item, req.order, req.l, req.stats, ET_T,
-                        req.use_rule2)
-            else:
-                payload = listing.list_spilled(
-                    item, req.l, req.stats, et_t=ET_T)
+            try:
+                if req.mode == "count":
+                    with trace.span("spill/count", s=item.s, rid=req.rid):
+                        payload = engine_jax.count_spilled(
+                            item, req.order, req.l, req.stats, ET_T,
+                            req.use_rule2)
+                else:
+                    payload = listing.list_spilled(
+                        item, req.l, req.stats, et_t=ET_T)
+            except Exception as exc:  # containment (host spill died)
+                self._isolate(a, exc)
+                return True
             req.add_stage("device", time.monotonic() - t0)
             req.deliver(seq, payload)
             return True
         a.remaining -= item.B
+        self._done_tiles += item.B
         key = (req.mode, req.l, item.T)
         buf = self._buffers.get(key)
         if buf is None:
@@ -372,14 +487,21 @@ class BatchScheduler:
                       flush_t=flush_t):
                 dt = time.monotonic() - flush_t
                 for req, seq, s0, s1, _ in segments:
-                    req.add_stage("device", dt)
-                    trace.async_instant(
-                        "request/device", id=req.rid, seq=seq,
-                        rows=s1 - s0)
-                    req.deliver(seq, engine_jax.combine_counts(
-                        hard[s0:s1], nv[s0:s1], t[s0:s1], f[s0:s1], l, True))
+                    # per-segment containment: one request's combine /
+                    # delivery failure never poisons its batchmates
+                    try:
+                        payload = engine_jax.combine_counts(
+                            hard[s0:s1], nv[s0:s1], t[s0:s1], f[s0:s1],
+                            l, True)
+                        req.add_stage("device", dt)
+                        trace.async_instant(
+                            "request/device", id=req.rid, seq=seq,
+                            rows=s1 - s0)
+                        req.deliver(seq, payload)
+                    except Exception as exc:
+                        self._note_isolated(req, exc)
 
-            self._count_disp(l).submit(fused, route=route)
+            disp, token = self._count_disp(l), "count"
         else:
 
             def route(_batch, bufs, cnt, ovf, segments=segments, l=l,
@@ -387,18 +509,30 @@ class BatchScheduler:
                 dt = time.monotonic() - flush_t
                 total = 0
                 for req, seq, s0, s1, chunk in segments:
-                    rows = listing.decode_batch(
-                        chunk, bufs[s0:s1], cnt[s0:s1], ovf[s0:s1], l,
-                        req.stats, et_t=ET_T)
-                    req.add_stage("device", dt)
-                    trace.async_instant(
-                        "request/device", id=req.rid, seq=seq,
-                        rows=rows.shape[0])
-                    req.deliver(seq, rows)
-                    total += rows.shape[0]
+                    # per-segment containment (see the count route)
+                    try:
+                        rows = listing.decode_batch(
+                            chunk, bufs[s0:s1], cnt[s0:s1], ovf[s0:s1], l,
+                            req.stats, et_t=ET_T)
+                        req.add_stage("device", dt)
+                        trace.async_instant(
+                            "request/device", id=req.rid, seq=seq,
+                            rows=rows.shape[0])
+                        req.deliver(seq, rows)
+                        total += rows.shape[0]
+                    except Exception as exc:
+                        self._note_isolated(req, exc)
                 return total
 
-            self._list_disp(l).submit(fused, route=route)
+            disp, token = self._list_disp(l), "list"
+        try:
+            disp.submit(fused, route=route)
+        except Exception as exc:
+            # the dispatcher itself rejected the batch (past its own
+            # retry/demotion ladder): fail the owners, keep the service up
+            trace.instant("serve/submit_failed", mode=token, error=repr(exc))
+            for req in {id(r): r for r, _, _, _, _ in segments}.values():
+                self._note_isolated(req, exc)
 
     def flush_all(self) -> None:
         """Flush every fuse buffer (stream exhaustion / idle / shutdown)."""

@@ -18,8 +18,17 @@ Request lifecycle::
 
 Overload behavior: a full queue rejects non-blocking submits with
 :class:`~repro.serve.request.ServiceOverloaded` (counted in
-``ServeStats.rejected``); deadlines are accounting only -- admitted work
-always completes exactly, late or not.
+``ServeStats.rejected``); with ``shed_on_projected_miss=True`` the
+scheduler additionally sheds deadline-bearing requests whose projected
+completion already misses (``ServeStats.shed``).  Deadlines are
+accounting only by default -- admitted work completes exactly, late or
+not -- unless a request opts into ``enforce_deadline=True``, in which
+case expiry cooperatively cancels that request (and only it) with
+:class:`~repro.serve.request.DeadlineExceeded`.
+
+Failure containment (DESIGN.md section 12): one request's engine,
+sink, or stream exception resolves *that* ticket exceptionally while
+the scheduler thread and every cotenant request keep running.
 """
 
 from __future__ import annotations
@@ -84,6 +93,7 @@ class CliqueService:
         plan_cache_dir: Optional[str] = None,
         async_staging: bool = True,
         max_inflight: int = 2,
+        shed_on_projected_miss: bool = False,
         metrics_port: Optional[int] = None,
         start: bool = True,
     ) -> None:
@@ -105,6 +115,7 @@ class CliqueService:
             plan_cache_dir=plan_cache_dir,
             async_staging=async_staging,
             max_inflight=max_inflight,
+            shed_on_projected_miss=shed_on_projected_miss,
             stats=self.stats,
             engine_stats=self.engine_stats,
         )
@@ -115,6 +126,7 @@ class CliqueService:
         self._resume = threading.Event()
         self._resume.set()
         self._closing = threading.Event()
+        self._abort = threading.Event()  # close(drain=False): shed, don't finish
         self._error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
         # /metrics exposition (off by default; metrics_port=0 = ephemeral)
@@ -150,12 +162,19 @@ class CliqueService:
         """Resume the scheduler after :meth:`pause`."""
         self._resume.set()
 
-    def close(self, timeout: Optional[float] = None) -> None:
+    def close(self, timeout: Optional[float] = None,
+              drain: bool = True) -> None:
         """Drain queued+active requests, then shut the tier down.
 
         Blocks until the scheduler thread exits (up to ``timeout``) and
-        the dispatchers are finished.  Idempotent.
+        the dispatchers are finished.  Idempotent.  With ``drain=False``
+        in-flight and queued requests are not completed: every
+        unresolved ticket resolves with
+        :class:`~repro.serve.request.ServiceClosed` (no hang) and the
+        tier shuts down as fast as device teardown allows.
         """
+        if not drain:
+            self._abort.set()
         self._closing.set()
         self._resume.set()
         self._queue.close()
@@ -206,6 +225,7 @@ class CliqueService:
         vertex_filter: Optional[int] = None,
         max_out: Optional[int] = None,
         deadline_s: Optional[float] = None,
+        enforce_deadline: bool = False,
         sink=None,
         block: bool = True,
         timeout: Optional[float] = None,
@@ -217,7 +237,11 @@ class CliqueService:
         (keep cliques containing that vertex), ``max_out`` (truncate
         after filtering, with early stop), and a custom ``sink``.
         ``deadline_s`` is a relative latency target used for EDF
-        scheduling and miss accounting -- never cancellation.
+        scheduling and miss accounting; with ``enforce_deadline=True``
+        it becomes real: at expiry the scheduler cancels this request
+        cooperatively and the ticket raises
+        :class:`~repro.serve.request.DeadlineExceeded` carrying any
+        partial results.
 
         Backpressure: with ``block=False`` a full admission queue raises
         :class:`~repro.serve.request.ServiceOverloaded` instead of
@@ -239,7 +263,8 @@ class CliqueService:
         req = Request(
             g, k, mode, order=order, use_rule2=use_rule2,
             vertex_filter=vertex_filter, max_out=max_out,
-            deadline_s=deadline_s, sink=sink,
+            deadline_s=deadline_s, enforce_deadline=enforce_deadline,
+            sink=sink,
         )
         req._on_done = self._record_done
         req.mark_submitted()
@@ -307,10 +332,24 @@ class CliqueService:
         except Exception as exc:  # bad request: resolve it, keep serving
             req.fail(exc)
 
+    def _shed_all(self, exc: BaseException) -> None:
+        """Resolve every active and queued request with ``exc``."""
+        self._sched.fail_active(exc)
+        while True:
+            req = self._queue.get_nowait()
+            if req is None:
+                break
+            req.fail(exc)
+
     def _run(self) -> None:
         sched, queue = self._sched, self._queue
         try:
             while True:
+                if self._abort.is_set():
+                    # close(drain=False): resolve everything, skip the work
+                    self._shed_all(ServiceClosed(
+                        "service closed (drain=False)"))
+                    break
                 if not self._resume.is_set():
                     if self._closing.is_set():
                         self._resume.set()
@@ -334,12 +373,12 @@ class CliqueService:
                 req = queue.get(timeout=0.05)
                 if req is not None:
                     self._admit_safe(req)
-        except BaseException as exc:  # scheduler died: fail all waiters
+        except (KeyboardInterrupt, SystemExit):  # never swallow these
+            raise
+        except Exception as exc:
+            # the scheduler *infrastructure* died (per-request failures
+            # are contained upstream and never reach here): fail every
+            # waiter with the real error so no ticket hangs, then re-raise
             self._error = exc
-            sched.fail_active(exc)
-            while True:
-                req = queue.get_nowait()
-                if req is None:
-                    break
-                req.fail(exc)
+            self._shed_all(exc)
             raise

@@ -180,8 +180,12 @@ def get(key: str) -> Optional[TuningRecord]:
         return None
     from ..checkpoint import store
 
+    from ..resilience import inject
+
     try:
-        ckpt = store.restore_checkpoint(_record_dir(base, key))
+        inject.fire("tune.read")
+        ckpt = store.restore_checkpoint(_record_dir(base, key),
+                                        _corrupt_site="tune.read")
     except Exception:
         return None  # corrupt on-disk record: fall back to live measurement
     if ckpt is None:
