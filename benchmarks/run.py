@@ -565,19 +565,22 @@ def bench_dispatch(graph_spec="rmat:12", ks=(5,), device_counts=None,
 def diff_against_baseline(records, baseline_path):
     """Compare this run's counts against a committed baseline JSON.
 
-    Matches records on (kind, graph, k, devices) -- counts must agree
-    across backends by construction, so the backend is deliberately NOT
-    part of the key: a lax run is diffed against a pallas-era baseline and
-    vice versa.  Any count disagreement is flagged -- the regression gate
-    of the CI bench-smoke job (the committed baseline is BENCH_pr4.json).
-    Records present on only one side are counted in the summary line but
-    not fatal (the suites may differ in scope).
+    Matches records on (kind, graph, k, devices, batch) -- counts must
+    agree across backends by construction, so the backend is deliberately
+    NOT part of the key: a lax run is diffed against a pallas-era baseline
+    and vice versa.  ``batch`` (None for the static sweeps) keys the
+    mutation benchmark's per-batch snapshots, whose counts evolve with the
+    seeded churn.  Any count disagreement is flagged -- the regression
+    gate of the CI bench-smoke job (the committed baseline is
+    BENCH_pr10.json).  Records present on only one side are counted in
+    the summary line but not fatal (the suites may differ in scope).
     """
     with open(baseline_path) as f:
         base = json.load(f)["records"]
 
     def key(r):
-        return (r.get("kind", "count"), r["graph"], r["k"], r["devices"])
+        return (r.get("kind", "count"), r["graph"], r["k"], r["devices"],
+                r.get("batch"))
 
     base_by_key = {key(r): r for r in base}
     mismatches = []
@@ -654,6 +657,165 @@ def assert_warm_start(records, factor):
     if failures:
         for msg in failures:
             print(f"WARM-START FAILURE: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic graphs: incremental plan repair vs from-scratch rebuild (--mutate)
+# ---------------------------------------------------------------------------
+
+def bench_mutate(graph_spec="rmat:12", ks=(5,), n_batches=5, churn=0.01,
+                 order="hybrid", seed=20250808, out_json=None, baseline=None,
+                 append=False, assert_repair=None):
+    """Edge-churn sweep: ``churn`` fraction of m mutated across
+    ``n_batches`` seeded insert/delete batches (half inserts / half
+    deletes each), every batch followed by an incremental
+    :func:`repair_plan` AND a from-scratch :func:`pipeline.build_plan`
+    of the mutated graph.  The touched-neighborhood closure is a
+    constant factor wider than the batch itself (a deleted hub edge
+    retires every tile over its common neighborhood), so the per-batch
+    fraction is ``churn / n_batches`` -- on rmat:12 the default 1% total
+    keeps every batch safely under the ``CHURN_THRESHOLD`` fallback.
+
+    Per batch the sweep verifies (exits non-zero on any violation):
+
+    * counts from the repaired plan == counts from the scratch plan for
+      every k,
+    * listed clique rows byte-identical (canonically sorted) between the
+      two plans, and
+    * the per-batch :func:`delta_cliques` gained/lost rows compose the
+      previous snapshot's rows into exactly the new snapshot's rows.
+
+    ``repair_s`` vs ``rebuild_s`` in the emitted records is the
+    amortization claim of repro.delta (DESIGN.md 13); ``assert_repair``
+    enforces ``sum(rebuild_s) / sum(repair_s) >= FACTOR`` over the
+    repaired (non-fallback) batches -- the BENCH_pr10.json acceptance
+    gate.  The batch stream is deterministic in ``seed``, so committed
+    per-batch counts are diffable by :func:`diff_against_baseline`.
+    """
+    from repro.core import ebbkc, pipeline
+    from repro.core.graph import apply_edge_batch
+    from repro.delta import delta_cliques, repair_plan, rows_diff, rows_union
+    from repro.delta.query import rows_sorted
+    from repro.launch.clique import load_graph
+
+    g = load_graph(graph_spec)
+    gname = graph_spec.replace(":", "").replace(",", "-")
+    rng = np.random.default_rng(seed)
+    plan, build0_s = timed(pipeline.build_plan, g, order, repeat=2)
+    emit(f"mutate/{gname}/plan_build", build0_s,
+         f"n={g.n};m={g.m};order={order}")
+    prev_rows = {k: rows_sorted(ebbkc.list_cliques(g, k, order=order,
+                                                   plan=plan)[0])
+                 for k in ks}
+    records = []
+    failures = []
+    repair_total = rebuild_total = 0.0
+    n_repaired = 0
+    for b in range(n_batches):
+        half = max(1, round(g.m * churn / (2 * n_batches)))
+        # inserts: rejection-sample pairs not already edges (canonical
+        # u < v), so the batch's nominal churn is not diluted by no-ops
+        present = set(map(int, g.edge_keys()))
+        ins = []
+        while len(ins) < half:
+            u, v = (int(x) for x in rng.integers(0, g.n, 2))
+            if u == v:
+                continue
+            u, v = min(u, v), max(u, v)
+            if u * g.n + v not in present:
+                present.add(u * g.n + v)
+                ins.append((u, v))
+        dele = g.edges[rng.choice(g.m, half, replace=False)]
+        g2 = apply_edge_batch(g, insert=np.asarray(ins, np.int64),
+                              delete=dele)
+        (plan2, info), repair_s = timed(repair_plan, plan, g2, order,
+                                        repeat=2)
+        scratch, rebuild_s = timed(pipeline.build_plan, g2, order, repeat=2)
+        if not info.rebuilt:
+            repair_total += repair_s
+            rebuild_total += rebuild_s
+            n_repaired += 1
+        for k in ks:
+            r_rep = ebbkc.count(g2, k, order=order, plan=plan2)
+            r_scr = ebbkc.count(g2, k, order=order, plan=scratch)
+            rows = rows_sorted(
+                ebbkc.list_cliques(g2, k, order=order, plan=plan2)[0])
+            srows = rows_sorted(
+                ebbkc.list_cliques(g2, k, order=order, plan=scratch)[0])
+            if r_rep.count != r_scr.count:
+                failures.append(f"batch {b} k={k}: repaired count "
+                                f"{r_rep.count} != scratch {r_scr.count}")
+            if not np.array_equal(rows, srows):
+                failures.append(f"batch {b} k={k}: repaired listing rows "
+                                "differ from scratch rows")
+            d, delta_s = timed(delta_cliques, plan, plan2, info, k,
+                               order=order)
+            composed = rows_union(rows_diff(prev_rows[k], d.lost), d.gained)
+            if not np.array_equal(rows_sorted(composed), rows):
+                failures.append(f"batch {b} k={k}: delta does not compose "
+                                "prev snapshot into new snapshot")
+            prev_rows[k] = rows
+            speedup = rebuild_s / max(repair_s, 1e-9)
+            emit(f"mutate/{gname}/k{k}/batch{b}", repair_s,
+                 f"count={r_rep.count};rebuild_s={rebuild_s:.4f};"
+                 f"repair_speedup={speedup:.2f};churn={info.churn:.4f};"
+                 f"rebuilt={info.rebuilt};touched={info.touched_new.size};"
+                 f"inserted={info.n_insert};deleted={info.n_delete};"
+                 f"gained={d.gained.shape[0]};lost={d.lost.shape[0]};"
+                 f"delta_query_s={delta_s:.4f}")
+            records.append({
+                "kind": "mutate", "graph": graph_spec, "k": k,
+                "devices": 1, "batch": b, "order": order,
+                "seconds": repair_s, "count": r_rep.count,
+                "repair_s": repair_s, "rebuild_s": rebuild_s,
+                "plan_build_s": rebuild_s,
+                "repair_speedup": speedup,
+                "churn": info.churn, "rebuilt": info.rebuilt,
+                "touched_edges": int(info.touched_new.size),
+                "inserted": info.n_insert, "deleted": info.n_delete,
+                "delta_gained": int(d.gained.shape[0]),
+                "delta_lost": int(d.lost.shape[0]),
+                "delta_query_s": delta_s,
+                "rows_identical": bool(np.array_equal(rows, srows)),
+            })
+        g, plan = g2, plan2
+    agg = rebuild_total / max(repair_total, 1e-9)
+    emit(f"mutate/{gname}/summary", repair_total,
+         f"batches={n_batches};repaired={n_repaired};"
+         f"rebuild_total_s={rebuild_total:.3f};"
+         f"aggregate_repair_speedup={agg:.2f}")
+    if out_json:
+        payload = {"graph": graph_spec, "ks": list(ks),
+                   "n_batches": n_batches, "churn": churn, "order": order,
+                   "seed": seed, "parity": not failures,
+                   "aggregate_repair_speedup": agg, "records": records}
+        if append and os.path.exists(out_json):
+            with open(out_json) as f:
+                prior = json.load(f)
+            prior["records"] = prior.get("records", []) + records
+            prior["parity"] = prior.get("parity", True) and not failures
+            prior["aggregate_repair_speedup"] = agg
+            payload = prior
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {out_json} ({len(payload['records'])} records)",
+              file=sys.stderr)
+    if baseline:
+        for k, n, got, want in diff_against_baseline(records, baseline):
+            failures.append(f"baseline regression k={k} devices={n}: "
+                            f"{got} != baseline {want}")
+    if assert_repair is not None:
+        if n_repaired < n_batches:
+            failures.append(f"{n_batches - n_repaired} batches took the "
+                            "rebuild fallback (repair gate needs the "
+                            "repair path)")
+        if agg < assert_repair:
+            failures.append(f"aggregate repair speedup {agg:.2f}x < "
+                            f"required {assert_repair:g}x")
+    if failures:
+        for msg in failures:
+            print(f"MUTATE FAILURE: {msg}", file=sys.stderr)
         raise SystemExit(1)
 
 
@@ -851,6 +1013,31 @@ def main() -> None:
                          "side by side")
     ap.add_argument("--tune-budget", type=float, default=20.0,
                     help="search budget in seconds for --tune")
+    ap.add_argument("--mutate", action="store_true",
+                    help="run the dynamic-graph sweep instead: seeded "
+                         "insert/delete batches on --graph, incremental "
+                         "plan repair timed against a from-scratch rebuild "
+                         "with byte-identical counts/listing rows enforced "
+                         "at every batch")
+    ap.add_argument("--mutate-batches", type=int, default=5,
+                    help="number of edge-churn batches for --mutate")
+    ap.add_argument("--mutate-churn", type=float, default=0.01,
+                    help="total fraction of m mutated across the sweep "
+                         "(split evenly over the batches, half inserts / "
+                         "half deletes each)")
+    ap.add_argument("--mutate-order", default="hybrid",
+                    choices=["truss", "hybrid"],
+                    help="edge ordering for --mutate (color always "
+                         "rebuilds, so it is not a repair benchmark)")
+    ap.add_argument("--mutate-seed", type=int, default=20250808,
+                    help="RNG seed for the --mutate batch stream (the "
+                         "committed baseline's per-batch counts are only "
+                         "reproducible under the same seed)")
+    ap.add_argument("--assert-repair", type=float, default=None,
+                    metavar="FACTOR",
+                    help="with --mutate: require the aggregate "
+                         "rebuild_s/repair_s over all batches to be >= "
+                         "FACTOR (exits non-zero otherwise)")
     ap.add_argument("--phase", default=None, choices=["cold", "warm"],
                     help="tag this run's records (cold = first process on "
                          "a tune cache, warm = a later one)")
@@ -868,6 +1055,15 @@ def main() -> None:
         from repro import tune
         tune.configure(args.tune_cache)
     print("name,us_per_call,derived")
+    if args.mutate:
+        ks = tuple(int(x) for x in args.k.split(","))
+        bench_mutate(graph_spec=args.graph, ks=ks,
+                     n_batches=args.mutate_batches,
+                     churn=args.mutate_churn, order=args.mutate_order,
+                     seed=args.mutate_seed, out_json=args.json,
+                     baseline=args.baseline, append=args.append,
+                     assert_repair=args.assert_repair)
+        return
     if args.devices:
         counts = [int(x) for x in args.devices.split(",")]
         # XLA_FLAGS must be in the environment before the backend

@@ -176,6 +176,27 @@ def restore_checkpoint(directory: str, template=None,
             "metadata": metadata}
 
 
+def read_metadata(directory: str, step: Optional[int] = None
+                  ) -> Optional[Dict]:
+    """The ``metadata`` dict of a committed step, without loading arrays.
+
+    Cheap lineage/inventory probe (e.g. a plan store's version lineage):
+    reads only ``meta.json``.  Returns None when the step is absent or
+    the metadata is unreadable -- integrity of the array blob is *not*
+    checked here (that happens on the full :func:`restore_checkpoint`).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    path = os.path.join(directory, f"step_{step:010d}", "meta.json")
+    try:
+        with open(path) as f:
+            return json.load(f).get("metadata", {})
+    except (OSError, ValueError):
+        return None
+
+
 def quarantine(directory: str, step: Optional[int] = None,
                reason: str = "") -> Optional[str]:
     """Move a (corrupt) checkpoint step aside into ``<dir>/quarantine/``.

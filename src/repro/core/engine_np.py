@@ -84,6 +84,14 @@ class Stats:
     # build time (0.0 on warm queries)
     plan_cache_hit: bool = False
     plan_build_s: float = 0.0
+    # incremental plan maintenance (repro.delta.repair): batches repaired
+    # in place vs rebuilt from scratch (churn past the threshold, or a
+    # family with no local-repair path), wall seconds spent splicing, and
+    # edges whose tiles were re-extracted across all repairs
+    plan_repairs: int = 0
+    plan_rebuilds: int = 0
+    plan_repair_s: float = 0.0
+    delta_touched_edges: int = 0
     # persistent autotuner (repro.tune): wall seconds spent in live tuning
     # measurements during this query (0.0 warm), and whether every tuning
     # lookup was answered from a cache layer -- False when a live
@@ -132,6 +140,10 @@ class Stats:
         "pack_queue_peak": "max",
         "plan_cache_hit": "or",
         "plan_build_s": "sum",
+        "plan_repairs": "sum",
+        "plan_rebuilds": "sum",
+        "plan_repair_s": "sum",
+        "delta_touched_edges": "sum",
         "tune_s": "sum",
         "tune_cache_hit": "or",
     }

@@ -133,31 +133,43 @@ class TileTable:
         return np.nonzero(keep)[0]
 
 
-def _build_truss_table(g: Graph, td: TrussDecomposition) -> TileTable:
+def _build_truss_table(g: Graph, td: TrussDecomposition,
+                       eids: Optional[np.ndarray] = None) -> TileTable:
+    """Truss-family membership table; ``eids`` restricts to a sorted
+    subset of owner edges (the localized rebuild :mod:`repro.delta`
+    splices into a repaired plan -- cost bounded by those edges'
+    neighborhoods instead of m)."""
     ek = g.edge_keys()
     m = g.m
-    if m == 0:
+    sub = np.arange(m, dtype=np.int64) if eids is None \
+        else np.asarray(eids, dtype=np.int64)
+    if m == 0 or sub.size == 0:
         z = np.zeros(0, dtype=np.int64)
         return TileTable("truss", z, np.zeros((0, 2), np.int64),
                          np.zeros(1, np.int64), z, z, ek, td.rank)
     deg = np.diff(g.indptr)
-    u, v = g.edges[:, 0], g.edges[:, 1]
+    u, v = g.edges[sub, 0], g.edges[sub, 1]
     swap = deg[u] > deg[v]
     a = np.where(swap, v, u)
     b = np.where(swap, u, v)
-    # pi_tau rank per directed CSR slot
-    src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
-    rank_csr = td.rank[g.edge_ids(src, g.indices)]
     r_e = td.rank
     owner, pos = ragged_expand(deg[a])
     idx = g.indptr[a][owner] + pos
     w = g.indices[idx]
-    keep = (rank_csr[idx] > r_e[owner]) & (w != b[owner])
-    owner, w = owner[keep], w[keep]
-    bb = b[owner]
+    own_e = sub[owner]
+    # pi_tau rank of the CSR edge (a, w) at each expanded slot: one bulk
+    # 2m-key probe when building the whole table, per-slot probes (cost
+    # bounded by the subset's neighborhoods) for a localized rebuild
+    if eids is None:
+        src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
+        rank_aw = td.rank[g.edge_ids(src, g.indices)][idx]
+    else:
+        rank_aw = r_e[g.edge_ids(a[owner], w)]
+    keep = (rank_aw > r_e[own_e]) & (w != b[owner])
+    own_e, w, bb = own_e[keep], w[keep], b[owner][keep]
     hit, p = _edge_lookup(ek, m, g.n, np.minimum(bb, w), np.maximum(bb, w))
-    hit &= td.rank[p] > r_e[owner]
-    E, W = owner[hit], w[hit]
+    hit &= r_e[p] > r_e[own_e]
+    E, W = own_e[hit], w[hit]
     # canonical order: reverse pi_tau over tiles, ascending vertex id inside
     order = np.lexsort((W, -r_e[E]))
     E, W = E[order], W[order]
@@ -286,32 +298,54 @@ PLAN_FORMAT = 1
 #: graph plus O(sum tile sizes) table arrays, so keep the window small
 PLAN_CACHE_CAPACITY = 8
 
+#: canonicalization contract baked into every plan key: two graphs share
+#: a key only when their *canonical* forms (self-loops dropped, edges
+#: dedup'd and lexsorted u < v) match under the same contract version --
+#: a future change to ``graph.from_edges`` canonicalization must bump
+#: this tag so stale plans re-key instead of aliasing
+PLAN_CANON = "dedup-lexsorted-v1"
+
 _PLAN_CACHE: "collections.OrderedDict[str, PipelinePlan]" = \
     collections.OrderedDict()
 _PLAN_CACHE_LOCK = threading.Lock()
+# per-key single-flight build latches (cached_plan): key -> Event set
+# when the winning builder has published (or abandoned) its plan
+_PLAN_BUILDS: Dict[str, threading.Event] = {}
 
 
 def plan_key(g: Graph, order: str = "hybrid") -> str:
-    """Content-addressed cache key: graph edges + ordering family.
+    """Content-addressed cache key over the *whole* graph identity.
 
-    Truss and hybrid modes share one key (both consume the "truss"
-    membership table); color mode keys separately.  O(m) to compute --
-    negligible next to the O(delta*m) decomposition it lets a warm query
-    skip.
+    Hashes the vertex count, edge count, canonicalization contract
+    (:data:`PLAN_CANON`), ordering family, and the canonical edge list.
+    ``n`` matters even with identical edges: edge keys are ``u * n + v``,
+    so a plan built for a smaller vertex set mis-probes adjacency on a
+    graph with trailing isolated vertices (the aliasing regression in
+    ``test_pipeline.py``).  Truss and hybrid modes share one key (both
+    consume the "truss" membership table); color mode keys separately.
+    O(m) to compute -- negligible next to the O(delta*m) decomposition it
+    lets a warm query skip.
     """
     family = "color" if order == "color" else "truss"
     h = hashlib.sha256()
-    h.update(f"plan-v{PLAN_FORMAT}:{family}:{g.n}:{g.m}:".encode())
+    h.update(
+        f"plan-v{PLAN_FORMAT}:{PLAN_CANON}:{family}:{g.n}:{g.m}:".encode())
     h.update(np.ascontiguousarray(g.edges).tobytes())
     return h.hexdigest()[:24]
 
 
-def save_plan(plan: PipelinePlan, directory: str) -> str:
+def save_plan(plan: PipelinePlan, directory: str,
+              lineage: Optional[Dict] = None) -> str:
     """Persist a plan's built structures via :mod:`repro.checkpoint.store`.
 
     Saves the graph plus whatever is already built (truss decomposition,
     coloring, membership tables) -- load never recomputes what was saved.
     Atomic like every checkpoint (tmp dir + os.replace + COMMITTED).
+    ``lineage`` is an optional JSON dict recording how the plan came to be
+    (graph version, parent plan key, repair-vs-rebuild decision -- written
+    by :class:`repro.delta.PlanIndex`); it rides in the metadata and is
+    readable without deserializing arrays via
+    :func:`repro.checkpoint.store.read_metadata`.
     """
     from ..checkpoint import store
 
@@ -339,9 +373,11 @@ def save_plan(plan: PipelinePlan, directory: str) -> str:
         tables[family] = d
     if tables:
         tree["tables"] = tables
-    return store.save_checkpoint(
-        directory, 0, tree,
-        metadata={"format": PLAN_FORMAT, "families": sorted(plan._tables)})
+    metadata: Dict[str, object] = {
+        "format": PLAN_FORMAT, "families": sorted(plan._tables)}
+    if lineage is not None:
+        metadata["lineage"] = lineage
+    return store.save_checkpoint(directory, 0, tree, metadata=metadata)
 
 
 def load_plan(directory: str) -> Optional[PipelinePlan]:
@@ -413,45 +449,70 @@ def cached_plan(g: Graph, order: str = "hybrid", *,
     ``stats`` (a :class:`~repro.core.engine_np.Stats`) records
     ``plan_cache_hit`` and the cold-path ``plan_build_s``.
 
-    Thread-safe: concurrent misses on the same key may both build (the
-    last insert wins) but never corrupt the cache; plans themselves are
-    read-only after their table is built.
+    Thread-safe with per-key single-flight building: concurrent misses on
+    one key elect exactly one builder; the losers block on its latch and
+    then take the published plan as a cache hit (``plan_cache_hit=True``,
+    no ``plan_build_s``), so the O(delta*m) build runs once no matter how
+    many threads race a cold key.  If the builder dies, a blocked loser
+    takes over.  Plans themselves are read-only after their table is
+    built.
     """
     if order not in ("truss", "hybrid", "color"):
         raise ValueError(f"unknown edge-tile mode: {order}")
     key = plan_key(g, order)
-    with _PLAN_CACHE_LOCK:
-        plan = _PLAN_CACHE.get(key)
-        if plan is not None:
-            _PLAN_CACHE.move_to_end(key)
     family = "color" if order == "color" else "truss"
-    if plan is not None and family in plan._tables:
-        if stats is not None:
-            stats.plan_cache_hit = True
-        trace.instant("plan/cache_hit", source="memory", order=order)
-        return plan
-    if cache_dir is not None:
-        with trace.span("plan/load", order=order):
-            try:
-                inject.fire("plan.load")
-                plan = load_plan(os.path.join(cache_dir, key))
-            except inject.FaultInjected:
-                plan = None  # injected load fault degrades to a cache miss
-        if plan is not None and family in plan._tables:
+    while True:
+        latch = None
+        with _PLAN_CACHE_LOCK:
+            plan = _PLAN_CACHE.get(key)
+            if plan is not None and family in plan._tables:
+                _PLAN_CACHE.move_to_end(key)
+            else:
+                plan = None
+                latch = _PLAN_BUILDS.get(key)
+                if latch is None:
+                    # no builder in flight: this thread becomes it
+                    _PLAN_BUILDS[key] = threading.Event()
+        if plan is not None:
             if stats is not None:
                 stats.plan_cache_hit = True
-            trace.instant("plan/cache_hit", source="disk", order=order)
-            _plan_cache_insert(key, plan)
+            trace.instant("plan/cache_hit", source="memory", order=order)
             return plan
-    t0 = time.perf_counter()
-    with trace.span("plan/build", order=order, n=g.n, m=g.m):
-        plan = build_plan(g, order=order)
-    if stats is not None:
-        stats.plan_build_s += time.perf_counter() - t0
-    if cache_dir is not None:
-        save_plan(plan, os.path.join(cache_dir, key))
-    _plan_cache_insert(key, plan)
-    return plan
+        if latch is None:
+            break
+        # single-flight: another thread owns the build; wait for its
+        # latch, then loop to take the published plan as a hit (or, if
+        # the builder failed without publishing, become the builder)
+        with trace.span("plan/build_wait", order=order):
+            latch.wait()
+    try:
+        if cache_dir is not None:
+            with trace.span("plan/load", order=order):
+                try:
+                    inject.fire("plan.load")
+                    plan = load_plan(os.path.join(cache_dir, key))
+                except inject.FaultInjected:
+                    plan = None  # injected load fault -> a cache miss
+            if plan is not None and family in plan._tables:
+                if stats is not None:
+                    stats.plan_cache_hit = True
+                trace.instant("plan/cache_hit", source="disk", order=order)
+                _plan_cache_insert(key, plan)
+                return plan
+        t0 = time.perf_counter()
+        with trace.span("plan/build", order=order, n=g.n, m=g.m):
+            plan = build_plan(g, order=order)
+        if stats is not None:
+            stats.plan_build_s += time.perf_counter() - t0
+        if cache_dir is not None:
+            save_plan(plan, os.path.join(cache_dir, key))
+        _plan_cache_insert(key, plan)
+        return plan
+    finally:
+        with _PLAN_CACHE_LOCK:
+            latch = _PLAN_BUILDS.pop(key, None)
+        if latch is not None:
+            latch.set()
 
 
 # ---------------------------------------------------------------------------

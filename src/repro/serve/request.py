@@ -118,10 +118,14 @@ class Request:
     :class:`Ticket`, the scheduler and decode worker call
     :meth:`next_seq` / :meth:`deliver` / :meth:`finish_feeding`.
 
-    ``mode`` is ``"count"`` or ``"list"``.  Listing requests deliver into
-    ``sink`` (default: an in-memory ``ArraySink`` honoring ``max_out``)
-    after ``vertex_filter`` (keep rows containing that vertex) is
-    applied; ``max_out`` truncation happens *after* filtering.
+    ``mode`` is ``"count"``, ``"list"``, or ``"delta"``.  Listing and
+    delta requests deliver into ``sink`` (default: an in-memory
+    ``ArraySink`` honoring ``max_out``) after ``vertex_filter`` (keep
+    rows containing that vertex) is applied; ``max_out`` truncation
+    happens *after* filtering.  A delta request ("cliques gained since
+    version N") carries ``since_version`` and is answered from the
+    graph's :class:`~repro.delta.PlanIndex` lineage on the scheduler
+    thread, streaming through the same sequencer/sink machinery.
     ``enforce_deadline=True`` arms cooperative cancellation: the
     scheduler stops feeding the request at ``deadline_s`` and resolves it
     with :class:`DeadlineExceeded` instead of finishing late.
@@ -140,13 +144,19 @@ class Request:
         deadline_s: Optional[float] = None,
         enforce_deadline: bool = False,
         sink: Optional[listing.CliqueSink] = None,
+        since_version: Optional[int] = None,
     ) -> None:
-        if mode not in ("count", "list"):
-            raise ValueError(f"mode must be 'count' or 'list', got {mode!r}")
+        if mode not in ("count", "list", "delta"):
+            raise ValueError(
+                f"mode must be 'count', 'list', or 'delta', got {mode!r}")
         if order not in ("truss", "hybrid", "color"):
             raise ValueError(f"unknown edge-tile mode: {order}")
-        if mode == "list" and k < 3:
-            raise ValueError("listing requires k >= 3")
+        if mode in ("list", "delta") and k < 3:
+            raise ValueError(f"{mode} mode requires k >= 3")
+        if mode == "delta" and since_version is None:
+            raise ValueError("delta mode requires since_version")
+        if since_version is not None and since_version < 0:
+            raise ValueError("since_version must be >= 0")
         if k < 1:
             raise ValueError("k must be >= 1")
         if deadline_s is not None and deadline_s <= 0:
@@ -163,6 +173,7 @@ class Request:
         self.max_out = max_out
         self.deadline_s = deadline_s
         self.enforce_deadline = bool(enforce_deadline)
+        self.since_version = since_version
         self.stats = Stats()
         self.rid = next(_RID)  # ticket id; keys the request's trace tree
         self.stage_s: Dict[str, float] = {}
@@ -170,7 +181,7 @@ class Request:
         self.submit_t: Optional[float] = None  # monotonic, set at admission
         self.deadline_t: Optional[float] = None  # absolute monotonic
         self._external_sink = sink is not None
-        if mode == "list":
+        if mode != "count":
             self._sink = sink if sink is not None else listing.ArraySink(
                 self.k, max_out=max_out)
         else:
@@ -187,6 +198,7 @@ class Request:
         self._error: Optional[BaseException] = None
         self._on_done = None  # service hook, set at admission
         self._on_isolated = None  # scheduler hook: count contained failures
+        self._delta_entry = None  # service graph-registry entry (delta mode)
 
     # -- scheduler-side API -------------------------------------------------
 
@@ -329,7 +341,7 @@ class Request:
         missed = self.deadline_t is not None and now > self.deadline_t
         rows = None
         emitted = 0
-        if self.mode == "list":
+        if self.mode != "count":
             self._sink.close()
             emitted = self._sink.accepted
             self.stats.sink_bytes += self._sink.bytes_written

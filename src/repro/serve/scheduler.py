@@ -34,6 +34,7 @@ import dataclasses
 import math
 import threading
 import time
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -60,6 +61,10 @@ class ServeStats:
     ``deadline_cancels`` is deadline-*enforced* requests cooperatively
     cancelled at expiry, and ``shed`` is admissions rejected by the
     projected-deadline-miss load shedder.
+
+    Dynamic-graph counters: ``graph_updates`` is applied edge batches
+    (:meth:`~repro.serve.service.CliqueService.update_graph`) and
+    ``delta_requests`` is admitted ``mode="delta"`` subscription reads.
     """
 
     admitted: int = 0
@@ -75,6 +80,8 @@ class ServeStats:
     isolated_failures: int = 0
     deadline_cancels: int = 0
     shed: int = 0
+    graph_updates: int = 0
+    delta_requests: int = 0
 
     # every field is a monotonic total (repro.obs.metrics publication)
     _METRIC_KINDS = {f: "sum" for f in (
@@ -82,6 +89,7 @@ class ServeStats:
         "fused_batches", "cross_request_batches", "fused_rows",
         "fused_chunks", "deadline_flushes", "spill_tiles",
         "isolated_failures", "deadline_cancels", "shed",
+        "graph_updates", "delta_requests",
     )}
 
 
@@ -220,10 +228,14 @@ class BatchScheduler:
         self._cdisps: Dict[int, Dispatcher] = {}
         self._ldisps: Dict[int, ListDispatcher] = {}
         self._arrivals = 0
-        # load-shedding throughput estimate: tiles pulled so far and the
-        # monotonic time of the first pull (rate = tiles / elapsed)
-        self._done_tiles = 0
-        self._work_t0: Optional[float] = None
+        # load-shedding throughput estimate: recent (time, tiles) pull
+        # samples over a sliding window.  The window (rather than a
+        # lifetime tiles/elapsed ratio anchored at the first-ever pull)
+        # keeps the rate honest across idle gaps: a service that sat
+        # quiet for a minute would otherwise see its apparent throughput
+        # decay toward zero and shed the first requests of the next burst
+        self._rate_samples: "deque" = deque()
+        self._rate_window_s = 30.0
 
     # -- dispatcher pools ---------------------------------------------------
 
@@ -287,22 +299,55 @@ class BatchScheduler:
 
     # -- scheduling ---------------------------------------------------------
 
+    def _observe_tiles(self, n: int, now: Optional[float] = None) -> None:
+        """Record ``n`` pulled tiles into the sliding rate window."""
+        if now is None:
+            now = time.monotonic()
+        self._rate_samples.append((now, n))
+        horizon = now - self._rate_window_s
+        while self._rate_samples and self._rate_samples[0][0] < horizon:
+            self._rate_samples.popleft()
+
+    def _observed_rate(self, now: Optional[float] = None
+                       ) -> Optional[float]:
+        """Recent tile throughput (tiles/s), or None when untrustworthy.
+
+        None -- and therefore permissive admission -- until the window
+        holds at least ``fuse_rows`` tiles over a measurable span.  A
+        cold service, or one whose last work fell out of the window
+        during an idle stretch, admits rather than shedding on a stale
+        or nonexistent estimate.
+        """
+        if now is None:
+            now = time.monotonic()
+        horizon = now - self._rate_window_s
+        while self._rate_samples and self._rate_samples[0][0] < horizon:
+            self._rate_samples.popleft()
+        if not self._rate_samples:
+            return None
+        tiles = sum(n for _, n in self._rate_samples)
+        if tiles < self.fuse_rows:
+            return None
+        elapsed = now - self._rate_samples[0][0]
+        if elapsed <= 0:
+            return None
+        return tiles / elapsed
+
     def _maybe_shed(self, req: Request, new_tiles: int) -> None:
         """Reject a deadline-bearing request projected to miss (knob-gated).
 
         Uses the scheduler's own cost model: observed tile throughput
-        (pulled tiles / elapsed) against the backlog (active remaining
+        over the sliding window against the backlog (active remaining
         tiles + this request's selected tiles).  Conservative by design:
-        sheds only once enough tiles have been pulled to trust the rate.
+        permissive until the window holds enough recent pulls to trust
+        the rate -- a cold start or post-idle burst is never shed on a
+        missing or stale estimate.
         """
         if not self.shed_on_projected_miss or req.deadline_t is None:
             return
-        if self._work_t0 is None or self._done_tiles < self.fuse_rows:
+        rate = self._observed_rate()
+        if rate is None:
             return  # no trustworthy throughput estimate yet
-        elapsed = time.monotonic() - self._work_t0
-        if elapsed <= 0:
-            return
-        rate = self._done_tiles / elapsed  # tiles per second
         backlog = sum(a.remaining for a in self._active) + new_tiles
         projected = time.monotonic() + backlog / max(rate, 1e-9)
         if projected > req.deadline_t:
@@ -405,12 +450,10 @@ class BatchScheduler:
         except Exception as exc:  # per-request containment (stream died)
             self._isolate(a, exc)
             return True
-        if self._work_t0 is None:
-            self._work_t0 = time.monotonic()
         seq = req.next_seq()
         if isinstance(item, tiles_mod.Tile):
             a.remaining -= 1
-            self._done_tiles += 1
+            self._observe_tiles(1)
             with self.stats_lock:
                 self.stats.spill_tiles += 1
             t0 = time.monotonic()
@@ -430,7 +473,7 @@ class BatchScheduler:
             req.deliver(seq, payload)
             return True
         a.remaining -= item.B
-        self._done_tiles += item.B
+        self._observe_tiles(item.B)
         key = (req.mode, req.l, item.T)
         buf = self._buffers.get(key)
         if buf is None:

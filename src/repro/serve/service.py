@@ -37,13 +37,42 @@ import threading
 import time
 from typing import Optional, Union
 
+import numpy as np
+
 from ..core.engine_np import Stats
 from ..core.graph import Graph
+from ..delta import PlanIndex
 from ..obs import metrics as obs_metrics
 from ..obs import trace
 from ..obs.export import MetricsServer
 from .request import (Request, RequestQueue, ServiceClosed, Ticket)
 from .scheduler import BatchScheduler, ServeStats
+
+#: rows per delivered chunk when streaming a delta subscription read
+#: through the sequencer (keeps individual sink emits bounded)
+_DELTA_CHUNK_ROWS = 4096
+
+
+class _GraphEntry:
+    """One registered graph: current snapshot, version, delta lineage.
+
+    ``index`` (a :class:`~repro.delta.PlanIndex`) is created lazily on
+    the first :meth:`CliqueService.update_graph` call -- a never-mutated
+    graph pays nothing for the dynamic-graph machinery.  ``lock``
+    serializes updates and delta reads per entry (PlanIndex is not
+    thread-safe by itself).
+    """
+
+    __slots__ = ("graph", "index", "lock")
+
+    def __init__(self, g: Graph) -> None:
+        self.graph = g
+        self.index: Optional[PlanIndex] = None
+        self.lock = threading.Lock()
+
+    @property
+    def version(self) -> int:
+        return 0 if self.index is None else self.index.version
 
 
 class CliqueService:
@@ -209,10 +238,54 @@ class CliqueService:
         """Register ``g`` under ``name`` for by-name submission.
 
         Safe from any thread.  Re-registering a name replaces the graph
-        for *future* submissions only.
+        (at version 0, with no delta lineage) for *future* submissions
+        only.
         """
         with self._graphs_lock:
-            self._graphs[name] = g
+            self._graphs[name] = _GraphEntry(g)
+
+    def graph_version(self, name: str) -> int:
+        """Current version of a registered graph (0 until first update)."""
+        return self._entry(name).version
+
+    def update_graph(self, name: str, insert=None, delete=None,
+                     *, order: str = "hybrid") -> int:
+        """Apply one edge batch to a registered graph; returns the version.
+
+        Runs :meth:`~repro.delta.PlanIndex.apply_batch`: the mutated
+        graph's plan is locally repaired (or rebuilt past the churn
+        threshold) and published into the keyed plan cache, so the next
+        submission against ``name`` admits against a warm plan --
+        post-mutation queries pay O(touched neighborhood), not
+        O(delta*m).  The new snapshot is swapped in atomically under the
+        scheduler's stats lock; in-flight requests keep streaming their
+        admitted snapshot (exactly the re-registration semantics).
+
+        ``order`` fixes the maintained plan family on the *first* update
+        of this graph; later updates reuse the entry's index.  Safe from
+        any thread; updates to one graph serialize, different graphs
+        proceed concurrently.
+        """
+        entry = self._entry(name)
+        with entry.lock:
+            if entry.index is None:
+                entry.index = PlanIndex(
+                    entry.graph, order,
+                    cache_dir=self._sched.plan_cache_dir,
+                    stats=self.engine_stats)
+            version = entry.index.apply_batch(insert=insert, delete=delete)
+            with self._sched.stats_lock:
+                entry.graph = entry.index.graph
+                self.stats.graph_updates += 1
+        trace.instant("serve/graph_update", graph=name, version=version)
+        return version
+
+    def _entry(self, name: str) -> _GraphEntry:
+        with self._graphs_lock:
+            entry = self._graphs.get(name)
+        if entry is None:
+            raise KeyError(f"unknown graph {name!r}; register_graph first")
+        return entry
 
     def submit(
         self,
@@ -227,16 +300,26 @@ class CliqueService:
         deadline_s: Optional[float] = None,
         enforce_deadline: bool = False,
         sink=None,
+        since_version: Optional[int] = None,
         block: bool = True,
         timeout: Optional[float] = None,
     ) -> Ticket:
         """Submit one query; returns immediately with a :class:`Ticket`.
 
         ``graph`` is a registered name or a ``Graph`` instance.  ``mode``
-        is ``"count"`` or ``"list"``; listing honors ``vertex_filter``
-        (keep cliques containing that vertex), ``max_out`` (truncate
-        after filtering, with early stop), and a custom ``sink``.
-        ``deadline_s`` is a relative latency target used for EDF
+        is ``"count"``, ``"list"``, or ``"delta"``; listing honors
+        ``vertex_filter`` (keep cliques containing that vertex),
+        ``max_out`` (truncate after filtering, with early stop), and a
+        custom ``sink``.  ``mode="delta"`` is the subscription read --
+        rows of k-cliques *gained* since ``since_version`` of a
+        registered (by-name only) graph, answered from the delta lineage
+        maintained by :meth:`update_graph` and streamed through the same
+        sequencer/sink path as listing (so ``vertex_filter`` /
+        ``max_out`` / ``sink`` compose); ``since_version`` equal to the
+        current version yields an empty result, one ahead of it or
+        behind the retained history resolves the ticket with
+        ``ValueError``.  ``deadline_s`` is a relative latency target used
+        for EDF
         scheduling and miss accounting; with ``enforce_deadline=True``
         it becomes real: at expiry the scheduler cancels this request
         cooperatively and the ticket raises
@@ -252,20 +335,23 @@ class CliqueService:
         """
         if self._closing.is_set():
             raise ServiceClosed("service is closed")
+        entry = None
         if isinstance(graph, str):
-            with self._graphs_lock:
-                g = self._graphs.get(graph)
-            if g is None:
-                raise KeyError(f"unknown graph {graph!r}; register_graph "
-                               f"first")
+            entry = self._entry(graph)
+            g = entry.graph
         else:
+            if mode == "delta":
+                raise ValueError(
+                    "delta mode requires a registered graph name (the "
+                    "version lineage lives in the registry)")
             g = graph
         req = Request(
             g, k, mode, order=order, use_rule2=use_rule2,
             vertex_filter=vertex_filter, max_out=max_out,
             deadline_s=deadline_s, enforce_deadline=enforce_deadline,
-            sink=sink,
+            sink=sink, since_version=since_version,
         )
+        req._delta_entry = entry
         req._on_done = self._record_done
         req.mark_submitted()
         if mode == "count" and k < 3:
@@ -328,9 +414,43 @@ class CliqueService:
 
     def _admit_safe(self, req: Request) -> None:
         try:
-            self._sched.admit(req)
+            if req.mode == "delta":
+                self._serve_delta(req)
+            else:
+                self._sched.admit(req)
         except Exception as exc:  # bad request: resolve it, keep serving
             req.fail(exc)
+
+    def _serve_delta(self, req: Request) -> None:
+        """Answer a subscription read from the graph's delta lineage.
+
+        Runs on the scheduler thread at admission (delta reads are
+        in-memory set algebra over retained per-batch deltas -- no tile
+        stream to schedule).  Rows are delivered in bounded chunks
+        through the request's sequencer, so vertex filtering, max_out
+        truncation, custom sinks, and failure isolation all behave
+        exactly as in listing mode.
+        """
+        req.mark_admitted()
+        entry = req._delta_entry
+        with self._sched.stats_lock:
+            self.stats.delta_requests += 1
+        with trace.span("serve/delta", rid=req.rid, k=req.k,
+                        since=req.since_version):
+            with entry.lock:
+                if entry.index is None:
+                    if req.since_version != 0:
+                        raise ValueError(
+                            f"since={req.since_version} outside [0, 0]")
+                    rows = np.zeros((0, req.k), dtype=np.int64)
+                else:
+                    rows = entry.index.delta(req.k, req.since_version).gained
+        for start in range(0, rows.shape[0], _DELTA_CHUNK_ROWS):
+            if req.full:
+                break
+            req.deliver(req.next_seq(),
+                        rows[start:start + _DELTA_CHUNK_ROWS])
+        req.finish_feeding()
 
     def _shed_all(self, exc: BaseException) -> None:
         """Resolve every active and queued request with ``exc``."""

@@ -1,0 +1,349 @@
+"""repro.delta: incremental plan maintenance for dynamic graphs.
+
+Covers the mutable-graph seam (``apply_edge_batch``), localized truss
+repair and tile-table splicing (array-identical to a from-scratch build
+under the repaired decomposition), the churn-threshold rebuild fallback
+(recorded in Stats), per-batch and composed clique deltas, the versioned
+:class:`~repro.delta.PlanIndex` with persisted lineage, and the serving
+tier's ``update_graph`` / ``mode="delta"`` subscription path.
+
+The committed regression at the bottom pins the touched-set closure bug
+found while building this layer: two deleted edges sharing a common
+neighborhood put a survivor's edge in ``touched_old`` only, so its tile
+was retired without a replacement and one triangle silently vanished.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ebbkc, pipeline
+from repro.core.engine_np import Stats
+from repro.core.graph import Graph, apply_edge_batch, from_edges
+from repro.core.truss import edge_subset_supports, edge_supports
+from repro.data import rmat_graph
+from repro.delta import (CHURN_THRESHOLD, PlanIndex, delta_cliques,
+                         repair_plan)
+from repro.delta.query import rows_diff, rows_sorted, rows_union
+
+
+def rand_graph(n: int, m: int, seed: int) -> Graph:
+    rng = np.random.default_rng(seed)
+    return from_edges(n, rng.integers(0, n, size=(m, 2)))
+
+
+def mutate(g: Graph, seed: int, n_ins: int = 4, n_del: int = 3):
+    """One random batch: fresh pairs in, a sample of current edges out."""
+    rng = np.random.default_rng(seed)
+    ins = rng.integers(0, g.n, (n_ins, 2)) if n_ins else None
+    dele = g.edges[rng.choice(g.m, min(g.m, n_del), replace=False)] \
+        if n_del and g.m else None
+    return apply_edge_batch(g, insert=ins, delete=dele)
+
+
+# -- apply_edge_batch (the mutable-graph seam) ------------------------------
+
+def test_apply_edge_batch_semantics():
+    g = from_edges(6, np.array([[0, 1], [1, 2], [0, 2], [3, 4]]))
+    # insert dedups/canonicalizes; self loops dropped; n preserved
+    g2 = apply_edge_batch(g, insert=[(2, 0), (4, 3), (2, 3), (5, 5)])
+    assert g2.n == g.n and g2.m == g.m + 1
+    # delete is exact; deleting an absent edge is a no-op
+    g3 = apply_edge_batch(g2, delete=[(3, 2), (0, 5)])
+    assert np.array_equal(g3.edges, g.edges)
+    # insert wins when a pair appears in both lists (delete-then-insert)
+    g4 = apply_edge_batch(g, insert=[(0, 1)], delete=[(1, 0)])
+    assert np.array_equal(g4.edges, g.edges)
+    # idempotent
+    g5 = apply_edge_batch(g4, insert=[(0, 1)])
+    assert np.array_equal(g5.edges, g4.edges)
+    # validation: endpoints must be inside [0, n)
+    with pytest.raises(ValueError):
+        apply_edge_batch(g, insert=[(0, 6)])
+    with pytest.raises(ValueError):
+        apply_edge_batch(g, delete=[(-1, 0)])
+    # empty batch is the identity
+    assert np.array_equal(apply_edge_batch(g).edges, g.edges)
+
+
+def test_edge_subset_supports_matches_full():
+    for seed in range(4):
+        g = rand_graph(20, 70, seed)
+        full = edge_supports(g)
+        eids = np.sort(np.random.default_rng(seed).choice(
+            g.m, size=g.m // 2, replace=False))
+        assert np.array_equal(edge_subset_supports(g, eids), full[eids])
+        assert np.array_equal(
+            edge_subset_supports(g, np.arange(g.m)), full)
+
+
+# -- repair_plan: equivalence, fallback, accounting -------------------------
+
+@pytest.mark.parametrize("order", ["truss", "hybrid"])
+def test_repair_matches_from_scratch(order):
+    stats = Stats()
+    for seed in range(5):
+        g = rand_graph(22, 80, seed)
+        plan = pipeline.build_plan(g, order)
+        g2 = mutate(g, seed + 50)
+        plan2, info = repair_plan(plan, g2, order, churn_threshold=1.1,
+                                  stats=stats)
+        assert not info.rebuilt and stats.plan_repairs == seed + 1
+        assert stats.plan_repair_s > 0
+        scratch = pipeline.build_plan(g2, order)
+        for k in (3, 4, 5):
+            assert ebbkc.count(g2, k, plan=plan2).count == \
+                ebbkc.count(g2, k, plan=scratch).count, (seed, k)
+            a, _ = ebbkc.list_cliques(g2, k, order=order, plan=plan2)
+            b, _ = ebbkc.list_cliques(g2, k, order=order, plan=scratch)
+            assert np.array_equal(rows_sorted(a), rows_sorted(b)), (seed, k)
+    # across the sweep, at least one batch touched a real neighborhood
+    assert stats.delta_touched_edges > 0
+
+
+def test_splice_is_array_identical_to_full_build():
+    """The spliced table must equal a full build under the repaired
+    decomposition field-for-field -- the splice is bookkeeping only."""
+    for seed in range(5):
+        g = rand_graph(24, 90, seed)
+        plan = pipeline.build_plan(g, "truss")
+        g2 = mutate(g, seed + 9)
+        plan2, info = repair_plan(plan, g2, "truss", churn_threshold=1.1)
+        assert not info.rebuilt
+        full = pipeline._build_truss_table(g2, plan2._td)
+        tab = plan2._tables["truss"]
+        for f in ("edge_id", "anchors", "offsets", "verts", "thresh",
+                  "ekeys", "erank"):
+            assert np.array_equal(getattr(tab, f), getattr(full, f)), \
+                (seed, f)
+
+
+def test_churn_threshold_falls_back_to_rebuild():
+    g = rand_graph(20, 60, 1)
+    plan = pipeline.build_plan(g, "hybrid")
+    g2 = apply_edge_batch(
+        g, insert=np.random.default_rng(99).integers(0, 20, (40, 2)))
+    stats = Stats()
+    plan2, info = repair_plan(plan, g2, "hybrid", churn_threshold=0.05,
+                              stats=stats)
+    assert info.rebuilt and info.churn > 0.05
+    assert stats.plan_rebuilds == 1 and stats.plan_build_s > 0
+    assert stats.plan_repairs == 0
+    assert ebbkc.count(g2, 4, plan=plan2).count == ebbkc.count(g2, 4).count
+    # the default threshold is sane and the color family always rebuilds
+    assert 0 < CHURN_THRESHOLD < 1
+    cplan = pipeline.build_plan(g, "color")
+    _, cinfo = repair_plan(cplan, g2, "color", churn_threshold=1.1)
+    assert cinfo.rebuilt
+
+
+def test_repair_stats_merge_tripwire():
+    """New Stats fields must be merge-registered (the _MERGE_KINDS
+    tripwire) so multi-worker accounting folds instead of raising."""
+    a, b = Stats(), Stats()
+    a.plan_repairs, a.plan_rebuilds = 2, 1
+    a.plan_repair_s, a.delta_touched_edges = 0.5, 40
+    b.plan_repairs, b.delta_touched_edges = 1, 2
+    a.merge(b)
+    assert (a.plan_repairs, a.plan_rebuilds, a.delta_touched_edges) == \
+        (3, 1, 42)
+    assert a.plan_repair_s == 0.5
+
+
+def test_repair_rejects_vertex_set_change():
+    g = rand_graph(10, 20, 0)
+    plan = pipeline.build_plan(g, "hybrid")
+    bigger = from_edges(12, g.edges)
+    with pytest.raises(ValueError):
+        repair_plan(plan, bigger, "hybrid")
+
+
+# -- clique deltas ----------------------------------------------------------
+
+def test_delta_cliques_exact_per_batch():
+    for seed in range(4):
+        g = rand_graph(20, 75, seed)
+        plan = pipeline.build_plan(g, "hybrid")
+        g2 = mutate(g, seed + 31)
+        plan2, info = repair_plan(plan, g2, "hybrid", churn_threshold=1.1)
+        for k in (3, 4):
+            d = delta_cliques(plan, plan2, info, k)
+            a, _ = ebbkc.list_cliques(g, k)
+            b, _ = ebbkc.list_cliques(g2, k)
+            a, b = rows_sorted(a), rows_sorted(b)
+            assert np.array_equal(d.gained, rows_sorted(rows_diff(b, a)))
+            assert np.array_equal(d.lost, rows_sorted(rows_diff(a, b)))
+            assert d.net == b.shape[0] - a.shape[0]
+    with pytest.raises(ValueError):
+        delta_cliques(plan, plan2, info, 2)
+
+
+def test_rows_set_algebra():
+    a = np.array([[0, 1, 2], [1, 2, 3], [2, 3, 4]], dtype=np.int64)
+    b = np.array([[1, 2, 3], [5, 6, 7]], dtype=np.int64)
+    assert np.array_equal(rows_diff(a, b), a[[0, 2]])
+    assert rows_union(a, b).shape[0] == 4
+    empty = np.zeros((0, 3), dtype=np.int64)
+    assert np.array_equal(rows_diff(a, empty), a)
+    assert rows_diff(empty, a).shape == (0, 3)
+    assert np.array_equal(rows_union(empty, b), rows_sorted(b))
+
+
+# -- PlanIndex: versioning, composition, lineage ----------------------------
+
+def test_plan_index_versions_and_composed_deltas():
+    g = rand_graph(24, 85, 7)
+    idx = PlanIndex(g, "hybrid", churn_threshold=1.1, history=8)
+    assert idx.version == 0 and idx.oldest_version() == 0
+    snaps = {0: g}
+    for b in range(5):
+        v = idx.apply_batch(
+            insert=np.random.default_rng(200 + b).integers(0, 24, (3, 2)),
+            delete=idx.graph.edges[
+                np.random.default_rng(300 + b).choice(
+                    idx.graph.m, 2, replace=False)])
+        assert v == b + 1
+        snaps[v] = idx.graph
+    # warm queries after mutation: the repaired plan is the cached plan
+    s = Stats()
+    assert pipeline.cached_plan(idx.graph, "hybrid", stats=s) is idx.plan
+    assert s.plan_cache_hit
+    # composed deltas equal from-scratch snapshot diffs for every base
+    for since in range(6):
+        for k in (3, 4):
+            d = idx.delta(k, since)
+            a, _ = ebbkc.list_cliques(snaps[since], k)
+            b_, _ = ebbkc.list_cliques(idx.graph, k)
+            a, b_ = rows_sorted(a), rows_sorted(b_)
+            assert np.array_equal(d.gained, rows_sorted(rows_diff(b_, a)))
+            assert np.array_equal(d.lost, rows_sorted(rows_diff(a, b_)))
+    # the subscription read composes the vertex filter
+    full = idx.delta(3, 0).gained
+    if full.shape[0]:
+        v = int(full[0, 0])
+        got = idx.gained_since(3, 0, vertex=v)
+        assert np.array_equal(got, full[(full == v).any(axis=1)])
+    # range validation
+    with pytest.raises(ValueError):
+        idx.delta(3, idx.version + 1)
+    with pytest.raises(ValueError):
+        idx.delta(3, -1)
+
+
+def test_plan_index_history_window():
+    g = rand_graph(16, 40, 3)
+    idx = PlanIndex(g, "hybrid", churn_threshold=1.1, history=2)
+    for b in range(4):
+        idx.apply_batch(
+            insert=np.random.default_rng(b).integers(0, 16, (2, 2)))
+    assert idx.version == 4 and idx.oldest_version() == 2
+    idx.delta(3, 2)  # inside the window
+    with pytest.raises(ValueError):
+        idx.delta(3, 1)  # history exhausted
+
+
+def test_plan_index_lineage_persisted(tmp_path):
+    from repro.checkpoint import store
+
+    pipeline.clear_plan_cache()
+    g = rand_graph(18, 55, 11)
+    cache = str(tmp_path / "plans")
+    idx = PlanIndex(g, "hybrid", churn_threshold=1.1, cache_dir=cache)
+    parent = idx.plan_key
+    idx.apply_batch(insert=np.random.default_rng(1).integers(0, 18, (3, 2)))
+    meta = store.read_metadata(
+        str(tmp_path / "plans" / idx.plan_key))
+    assert meta is not None
+    lin = meta["lineage"]
+    assert lin["version"] == 1 and lin["parent_key"] == parent
+    assert lin["repaired"] is True and lin["inserted"] >= 1
+    # the persisted repaired plan restores across "processes" and is exact
+    pipeline.clear_plan_cache()
+    s = Stats()
+    plan = pipeline.cached_plan(idx.graph, "hybrid", cache_dir=cache,
+                                stats=s)
+    assert s.plan_cache_hit
+    assert ebbkc.count(idx.graph, 4, plan=plan).count == \
+        ebbkc.count(idx.graph, 4).count
+    assert store.read_metadata(str(tmp_path / "absent")) is None
+
+
+# -- serving tier: update_graph + delta subscriptions -----------------------
+
+def test_service_update_graph_and_delta_subscription():
+    from repro.serve import CliqueService
+
+    rng = np.random.default_rng(5)
+    n = 30
+    g = from_edges(n, rng.integers(0, n, (140, 2)))
+    svc = CliqueService()
+    try:
+        svc.register_graph("g", g)
+        assert svc.graph_version("g") == 0
+        # empty delta at the current version
+        d0 = svc.submit("g", 3, "delta", since_version=0).result(timeout=120)
+        assert d0.rows.shape == (0, 3) and d0.kind == "delta"
+        v1 = svc.update_graph("g", insert=rng.integers(0, n, (12, 2)))
+        assert v1 == 1 and svc.stats.graph_updates == 1
+        g2 = svc._entry("g").graph
+        # post-mutation queries serve the mutated snapshot exactly
+        assert svc.submit("g", 4, "count").result(timeout=120).count == \
+            ebbkc.count(g2, 4).count
+        # subscription read == from-scratch snapshot diff
+        a, _ = ebbkc.list_cliques(g, 3)
+        b, _ = ebbkc.list_cliques(g2, 3)
+        gain = rows_sorted(rows_diff(rows_sorted(b), rows_sorted(a)))
+        d = svc.submit("g", 3, "delta", since_version=0).result(timeout=120)
+        assert np.array_equal(rows_sorted(d.rows), gain)
+        assert d.emitted == d.rows.shape[0] and gain.shape[0] > 0
+        # vertex_filter and max_out compose exactly as in listing mode
+        v = int(gain[0, 0])
+        dv = svc.submit("g", 3, "delta", since_version=0,
+                        vertex_filter=v).result(timeout=120)
+        assert np.array_equal(
+            rows_sorted(dv.rows),
+            rows_sorted(gain[(gain == v).any(axis=1)]))
+        dm = svc.submit("g", 3, "delta", since_version=0,
+                        max_out=2).result(timeout=120)
+        assert dm.rows.shape[0] == min(2, gain.shape[0])
+        assert svc.stats.delta_requests >= 4
+        # error paths resolve the ticket; the service keeps serving
+        with pytest.raises(ValueError):
+            svc.submit("g", 3, "delta",
+                       since_version=99).result(timeout=120)
+        with pytest.raises(ValueError):  # delta needs a registered name
+            svc.submit(g2, 3, "delta", since_version=0)
+        with pytest.raises(ValueError):  # delta needs since_version
+            svc.submit("g", 3, "delta")
+        with pytest.raises(ValueError):  # and k >= 3
+            svc.submit("g", 2, "delta", since_version=0)
+        assert svc.submit("g", 3, "count").result(timeout=120).count == \
+            ebbkc.count(g2, 3).count
+    finally:
+        svc.close()
+
+
+def test_service_update_unknown_graph_raises():
+    from repro.serve import CliqueService
+
+    svc = CliqueService(start=False)
+    with pytest.raises(KeyError):
+        svc.update_graph("nope", insert=[(0, 1)])
+    svc.close()
+
+
+# -- committed regression: touched-set closure over survivors ---------------
+
+def test_regression_touched_set_closure():
+    """Two deleted edges sharing a common neighborhood used to leave a
+    surviving edge's tile retired with no replacement (it sat in
+    ``touched_old`` only), silently dropping one triangle.  Found by the
+    rng(5)/n=30 two-batch sequence below; the fix closes the touched
+    sets symmetrically over surviving edges."""
+    rng = np.random.default_rng(5)
+    n = 30
+    g = from_edges(n, rng.integers(0, n, (140, 2)))
+    idx = PlanIndex(g, "hybrid", churn_threshold=1.1)
+    idx.apply_batch(insert=rng.integers(0, n, (4, 2)))
+    idx.apply_batch(delete=idx.graph.edges[:3])
+    for k in (3, 4, 5):
+        assert ebbkc.count(idx.graph, k, plan=idx.plan).count == \
+            ebbkc.count(idx.graph, k).count, k

@@ -141,6 +141,87 @@ def test_empty_and_tiny_graphs():
             assert rows.shape == (want, k)
 
 
+#: permanent corpus for the edge-churn family: one seed per graph family
+#: (family = seed % len(FAMILIES)), so repair is exercised against every
+#: degenerate shape above.  Seed 5 rides along with the committed closure
+#: regression in tests/test_delta.py (a survivor's tile retired without a
+#: replacement when two deleted edges shared a common neighborhood).
+CHURN_REGRESSION_SEEDS = [0, 1, 2, 3, 4, 5, 6]
+
+
+def check_churn_seed(seed: int, ks=(3, 4, 5, 6), n_batches=3):
+    """One churn example: random insert/delete batches over a fuzz graph.
+
+    After every batch, for every ordering: the incrementally repaired
+    plan (repair forced via churn_threshold > 1, except color which
+    always takes the rebuild fallback) must agree with the brute oracle
+    AND byte-for-byte (canonically sorted) with a from-scratch plan of
+    the mutated graph, and the per-batch clique delta must equal the
+    brute set difference of the two snapshots.
+    """
+    from repro.core import pipeline
+    from repro.core.graph import apply_edge_batch
+    from repro.delta import repair_plan
+    from repro.delta.query import delta_cliques
+
+    fam, g = graph_from_seed(seed)
+    rng = np.random.default_rng(np.uint64(seed) * 2654435761 % 2**63)
+    orders = ("truss", "hybrid", "color")
+    plans = {o: pipeline.build_plan(g, o) for o in orders}
+    for b in range(n_batches):
+        ins = rng.integers(0, g.n, (int(rng.integers(1, 6)), 2)) \
+            if g.n else None
+        dele = g.edges[rng.choice(
+            g.m, min(g.m, int(rng.integers(1, 4))), replace=False)] \
+            if g.m else None
+        g2 = apply_edge_batch(g, insert=ins, delete=dele)
+        old_rows = {k: {tuple(r) for r in oracle.list_kcliques_brute(g, k)}
+                    for k in ks}
+        for order in orders:
+            plan2, info = repair_plan(plans[order], g2, order,
+                                      churn_threshold=1.1)
+            assert info.rebuilt == (order == "color"), (seed, fam, b, order)
+            scratch = pipeline.build_plan(g2, order)
+            for k in ks:
+                want = oracle.count_kcliques_brute(g2, k)
+                want_rows = np.asarray(
+                    sorted(oracle.list_kcliques_brute(g2, k)),
+                    dtype=np.int64).reshape(-1, k)
+                got = ebbkc.count(g2, k, order=order, plan=plan2).count
+                assert got == want, (seed, fam, b, order, k, got, want)
+                rows, _ = ebbkc.list_cliques(g2, k, order=order, plan=plan2)
+                srows, _ = ebbkc.list_cliques(g2, k, order=order,
+                                              plan=scratch)
+                assert np.array_equal(_rows_sorted(rows), want_rows), \
+                    (seed, fam, b, order, k, "repaired listing vs oracle")
+                assert np.array_equal(_rows_sorted(rows),
+                                      _rows_sorted(srows)), \
+                    (seed, fam, b, order, k, "repaired vs from-scratch")
+                d = delta_cliques(plans[order], plan2, info, k, order=order)
+                new_rows = {tuple(r)
+                            for r in oracle.list_kcliques_brute(g2, k)}
+                assert {tuple(r) for r in d.gained} == \
+                    new_rows - old_rows[k], (seed, fam, b, order, k, "gain")
+                assert {tuple(r) for r in d.lost} == \
+                    old_rows[k] - new_rows, (seed, fam, b, order, k, "lost")
+            plans[order] = plan2
+        g = g2
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_fuzz_edge_churn(seed):
+    """Random seeds through the edge-churn family: incremental repair vs
+    from-scratch plans vs the brute oracle, every ordering, k in 3..6."""
+    check_churn_seed(seed)
+
+
+@pytest.mark.parametrize("seed", CHURN_REGRESSION_SEEDS)
+def test_churn_regression_seeds(seed):
+    """Committed churn corpus: repair exercised over every graph family."""
+    check_churn_seed(seed, ks=(3, 4, 5))
+
+
 def test_multigraph_input_canonicalizes():
     """Duplicate edges and self loops in the input edge list must not
     change any count (exact-once attribution would double-count them if

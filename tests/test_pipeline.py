@@ -230,6 +230,102 @@ def test_plan_cache_dir_warms_across_processes(tmp_path, monkeypatch):
     assert ebbkc.count(g, 4, plan=plan).count == ref
 
 
+def test_plan_key_no_vertex_count_aliasing():
+    """Satellite regression: the cache key must fold in the full graph
+    identity, not just the edge bytes + family.
+
+    Two graphs with byte-identical edge lists but different ``n``
+    (trailing isolated vertices) are *different plans*: edge keys are
+    ``u * n + v``, so a plan built for the smaller vertex set mis-probes
+    adjacency when served for the larger graph.  The pre-fix edges-only
+    key collides for the twins; ``pipeline.plan_key`` must not -- and
+    serving the aliased plan must be demonstrably wrong, so this test
+    fails loudly if the key ever regresses.
+    """
+    import hashlib
+
+    from repro.core.graph import from_edges
+
+    s = 5
+    edges = np.argwhere(np.triu(np.ones((s, s), bool), 1)).astype(np.int64)
+    g_small = from_edges(s, edges)        # K5, n = 5
+    g_big = from_edges(s + 3, edges)      # K5 + 3 isolated vertices
+    assert np.array_equal(g_small.edges, g_big.edges)
+
+    def prefix_key(g, order):  # the pre-fix key: family + edge bytes only
+        family = "color" if order == "color" else "truss"
+        h = hashlib.sha256()
+        h.update(f"plan-v{pipeline.PLAN_FORMAT}:{family}:".encode())
+        h.update(np.ascontiguousarray(g.edges).tobytes())
+        return h.hexdigest()[:24]
+
+    # the old key aliases the twins; the fixed key separates them
+    assert prefix_key(g_small, "hybrid") == prefix_key(g_big, "hybrid")
+    assert pipeline.plan_key(g_small, "hybrid") != \
+        pipeline.plan_key(g_big, "hybrid")
+    # ...and the canonicalization contract is part of the key, so a
+    # future from_edges change re-keys instead of aliasing stale plans
+    assert pipeline.PLAN_CANON in ("dedup-lexsorted-v1",)
+
+    # the aliasing is not harmless: a plan is only substitutable for the
+    # graph identity it was keyed under.  The dynamic-graph update path
+    # mutates vertices that exist only in the big twin; handed the
+    # aliased small-n plan it hard-fails, while the correctly keyed
+    # plan for the same request repairs cleanly and stays exact
+    from repro.core.graph import apply_edge_batch
+    from repro.delta import repair_plan
+
+    g_mut = apply_edge_batch(g_big, insert=[(0, s), (1, s), (0, s + 1)])
+    plan_small = pipeline.build_plan(g_small, "hybrid")
+    with pytest.raises(ValueError):
+        repair_plan(plan_small, g_mut, "hybrid")
+    pipeline.clear_plan_cache()
+    plan_big = pipeline.cached_plan(g_big, "hybrid")
+    assert plan_big.g.n == g_big.n  # correct key -> correct identity
+    repaired, _ = repair_plan(plan_big, g_mut, "hybrid",
+                              churn_threshold=1.1)
+    for k in (3, 4):
+        assert ebbkc.count(g_mut, k, plan=repaired).count == \
+            ebbkc.count(g_mut, k).count
+
+
+def test_plan_cache_single_flight_race():
+    """Satellite regression: two threads racing a cold key must elect
+    exactly one builder -- the loser blocks on the latch and reports a
+    cache hit with zero build time (the pre-fix path double-built and
+    the loser's insert clobbered the winner's published plan)."""
+    import threading
+
+    from repro.core.engine_np import Stats
+
+    g = rmat_graph(8, 4, seed=21)
+    pipeline.clear_plan_cache()
+    barrier = threading.Barrier(2)
+    stats = [Stats(), Stats()]
+    plans = [None, None]
+    errs = []
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=30)
+            plans[i] = pipeline.cached_plan(g, "hybrid", stats=stats[i])
+        except Exception as exc:  # pragma: no cover - failure reporting
+            errs.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errs
+    assert plans[0] is plans[1]  # one published plan object, shared
+    built = [s for s in stats if s.plan_build_s > 0.0]
+    hits = [s for s in stats if s.plan_cache_hit]
+    assert len(built) == 1 and len(hits) == 1
+    assert hits[0] is not built[0]
+    assert ebbkc.count(g, 4, plan=plans[0]).count == ebbkc.count(g, 4).count
+
+
 def test_scheduler_batches_partition(rng):
     g = random_graph(rng, n_lo=25, n_hi=35, p_lo=0.5, p_hi=0.8)
     batches = [b for b in pipeline.stream_batches(g, 4, batch_size=4)

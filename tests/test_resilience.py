@@ -465,9 +465,9 @@ def test_load_shedding_on_projected_miss():
 
     g = make_graph(seed=3)
     sched = BatchScheduler(shed_on_projected_miss=True, fuse_rows=4)
-    # forge an observed throughput of ~1 tile/s with a long backlog
-    sched._done_tiles = 100
-    sched._work_t0 = time.monotonic() - 100.0
+    # forge an observed throughput of ~5 tiles/s inside the rate window
+    now = time.monotonic()
+    sched._rate_samples.extend([(now - 20.0, 50), (now - 10.0, 50)])
     req = Request(g, 5, "count", deadline_s=0.05)
     req.mark_submitted()
     with pytest.raises(ServiceOverloaded):
@@ -477,6 +477,42 @@ def test_load_shedding_on_projected_miss():
     req2 = Request(g, 5, "count")
     req2.mark_submitted()
     sched.admit(req2)
+    sched.fail_active(RuntimeError("test teardown"))
+    sched.finish()
+
+
+def test_shed_cold_start_and_stale_window_are_permissive():
+    """Satellite regression: the shed estimator must never reject on a
+    missing or stale rate.  Cold (no pulls yet) and post-idle (all
+    samples aged out of the window) states admit deadline-bearing
+    requests instead of shedding them on a decayed throughput guess."""
+    from repro.serve.request import Request
+    from repro.serve.scheduler import BatchScheduler
+
+    g = make_graph(seed=3)
+    # cold start: no observations at all -> permissive, no ZeroDivision
+    sched = BatchScheduler(shed_on_projected_miss=True, fuse_rows=4)
+    assert sched._observed_rate() is None
+    req = Request(g, 5, "count", deadline_s=1e-6)
+    req.mark_submitted()
+    sched.admit(req)  # must not raise
+    assert sched.stats.shed == 0
+    sched.fail_active(RuntimeError("test teardown"))
+
+    # post-idle: old samples fell out of the window -> permissive again.
+    # Under the pre-fix lifetime tiles/(now - first_pull) estimator this
+    # state read as a near-zero rate and shed the whole next burst.
+    now = time.monotonic()
+    sched._rate_samples.extend(
+        [(now - 3600.0, 1000), (now - 3599.0, 1000)])
+    assert sched._observed_rate(now) is None
+    req2 = Request(g, 5, "count", deadline_s=1e-6)
+    req2.mark_submitted()
+    sched.admit(req2)
+    assert sched.stats.shed == 0
+    # too few recent tiles is also untrustworthy (below fuse_rows)
+    sched._rate_samples.append((now - 1.0, 2))
+    assert sched._observed_rate(now) is None
     sched.fail_active(RuntimeError("test teardown"))
     sched.finish()
 
